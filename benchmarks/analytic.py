@@ -1,0 +1,266 @@
+"""Analytic FLOPs / HBM-bytes model per (arch x shape x knobs) cell.
+
+Why analytic: XLA's ``cost_analysis`` counts a while-loop body ONCE, so any
+scanned graph (layers, attention chunks, microbatches) under-reports FLOPs
+by the trip count; fully unrolling for measurement costs ~5-7 min of compile
+per train cell on this 1-core harness and distorts peak memory. Instead the
+roofline table uses this exact closed-form model — validated against fully
+unrolled ``cost_analysis`` measurements in EXPERIMENTS.md §Roofline
+(agreement within ~15%) — plus the trip-corrected collective parse from the
+compiled (scanned) HLO.
+
+All counts are GLOBAL (whole step, all devices); the roofline divides by
+chip count. A matmul [m,k]x[k,n] counts 2mkn FLOPs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import round_up
+from repro.models.xlstm import slstm_ffn_width
+
+
+@dataclass
+class Knobs:
+    attn_impl: str = "scan"        # scan/rect (full rectangle) | triangular
+    moe_dispatch: str = "einsum"
+    remat: str = "full"
+    fused_head: bool = False
+    cache_write: str = "masked"    # masked (3x cache traffic) | scatter (1x)
+    q_chunk: int = 2048
+    kv_chunk: int = 2048
+    capacity_factor: float = 1.25
+    moe_group: int = 4096
+
+
+def _attn_pairs(T: int, S: int, qc: int, kc: int, *, causal: bool,
+                window: int, impl: str) -> float:
+    """Number of (q,k) position pairs the implementation actually computes."""
+    qc = min(qc, T)
+    kc = min(kc, S)
+    if window and causal and window + qc < S:
+        strip = min(round_up(window + qc, 128), S)
+        return float(T) * strip                      # windowed strip path
+    if impl == "triangular" and causal:
+        nq, ns = T // qc, S // kc
+        pairs = 0
+        for qi in range(nq):
+            q_end = (qi + 1) * qc
+            for ki in range(ns):
+                if ki * kc >= q_end:
+                    break
+                pairs += qc * kc
+        return float(pairs)
+    return float(T) * S                              # full rectangle
+
+
+def _attn_layer_flops(cfg: ModelConfig, T: int, S: int, k: Knobs, *,
+                      causal=True, window=0, cross=False) -> float:
+    d = cfg.d_model
+    proj = 2.0 * T * (d * cfg.q_dim + cfg.q_dim * d)
+    if not cross:
+        proj += 2.0 * T * 2 * d * cfg.kv_dim
+    pairs = _attn_pairs(T, S, k.q_chunk, k.kv_chunk, causal=causal,
+                        window=window, impl=k.attn_impl)
+    core = 2.0 * pairs * cfg.n_heads * cfg.d_head * 2   # scores + pv
+    return proj + core
+
+
+def _ffn_flops(cfg: ModelConfig, T: int) -> float:
+    return 2.0 * T * 3 * cfg.d_model * cfg.d_ff
+
+
+def _moe_flops(cfg: ModelConfig, T: int, k: Knobs) -> float:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    group = min(k.moe_group, T)
+    C = max(8, int(group * cfg.top_k / E * k.capacity_factor) // 8 * 8)
+    G = T / group
+    router = 2.0 * T * d * E
+    expert = 2.0 * G * E * C * 3 * d * f
+    if k.moe_dispatch == "einsum":
+        transport = 2.0 * 2 * G * group * E * C * d  # dispatch + combine
+    else:
+        transport = 0.0                               # gather/scatter
+    return router + expert + transport
+
+
+def _rglru_flops(cfg: ModelConfig, T: int) -> float:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return 2.0 * T * (2 * d * w + 2 * w * (w // 8) + w * d) + 12.0 * T * w
+
+
+def _mlstm_flops(cfg: ModelConfig, T: int, chunk: int = 256) -> float:
+    d = cfg.d_model
+    inner = int(d * cfg.mlstm_proj_factor)
+    H = cfg.n_heads
+    dh = inner // H
+    L = min(chunk, T)
+    proj = 2.0 * T * (2 * d * inner + inner * d) \
+        + 2.0 * T * inner * cfg.mlstm_qkv_blocksize * 3 \
+        + 2.0 * T * 3 * inner * H * 2
+    intra = 2.0 * T * L * inner * 2                  # scores + pv
+    inter = 2.0 * T * dh * inner * 3                 # qC + state update
+    return proj + intra + inter
+
+
+def _slstm_flops(cfg: ModelConfig, T: int) -> float:
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    gates = 2.0 * T * 4 * (d * d + d * hd)
+    ffn = 2.0 * T * 3 * d * slstm_ffn_width(cfg)
+    return gates + ffn
+
+
+def forward_flops(cfg: ModelConfig, T_total: int, S_ctx: int, k: Knobs, *,
+                  decode: bool = False) -> dict:
+    """One forward pass over T_total tokens (global). For decode, T_total =
+    batch (one token each) and S_ctx is the cache length."""
+    T = T_total
+    S = S_ctx
+    per_unit = {"attn": 0.0, "ffn": 0.0, "moe": 0.0, "rec": 0.0}
+    for sym in cfg.block_pattern:
+        if sym in ("A", "L"):
+            window = cfg.local_window if sym == "L" else 0
+            if decode:
+                eff = min(window, S) if window else S
+                proj = 2.0 * T * (cfg.d_model * cfg.q_dim
+                                  + 2 * cfg.d_model * cfg.kv_dim
+                                  + cfg.q_dim * cfg.d_model)
+                per_unit["attn"] += proj \
+                    + 2.0 * T * eff * cfg.n_heads * cfg.d_head * 2
+            else:
+                per_unit["attn"] += _attn_layer_flops(cfg, T, S, k,
+                                                      window=window)
+            if cfg.family == "moe":
+                per_unit["moe"] += _moe_flops(cfg, T, k)
+            else:
+                per_unit["ffn"] += _ffn_flops(cfg, T)
+            if cfg.is_encoder_decoder:
+                per_unit["attn"] += _attn_layer_flops(cfg, T, S, k,
+                                                      causal=False,
+                                                      cross=True) \
+                    if not decode else 2.0 * T * (
+                        cfg.d_model * cfg.q_dim + cfg.q_dim * cfg.d_model) \
+                    + 2.0 * T * S * cfg.n_heads * cfg.d_head * 2
+        elif sym == "R":
+            per_unit["rec"] += _rglru_flops(cfg, T)
+            per_unit["ffn"] += _ffn_flops(cfg, T)
+        elif sym == "m":
+            if decode:
+                # recurrent step: projections + qC + state update, no
+                # intra-chunk attention
+                d = cfg.d_model
+                inner = int(d * cfg.mlstm_proj_factor)
+                dh = inner // cfg.n_heads
+                per_unit["rec"] += 2.0 * T * (3 * d * inner
+                                              + 3 * dh * inner)
+            else:
+                per_unit["rec"] += _mlstm_flops(cfg, T)
+        elif sym == "s":
+            per_unit["rec"] += _slstm_flops(cfg, T)
+    stack = {kk: v * cfg.n_groups for kk, v in per_unit.items()}
+    if cfg.is_encoder_decoder and not decode:
+        # encoder: same dims, bidirectional self-attn + ffn
+        enc = (_attn_layer_flops(cfg, T, S, k, causal=False)
+               + _ffn_flops(cfg, T)) * cfg.n_enc_layers
+        stack["attn"] += enc
+    head = 2.0 * T * cfg.d_model * cfg.padded_vocab
+    stack["head"] = head
+    stack["total"] = sum(stack.values())
+    return stack
+
+
+def cell_flops(cfg: ModelConfig, shape: ShapeConfig, k: Knobs) -> dict:
+    """Whole-step global FLOPs for a dry-run cell."""
+    if shape.kind == "train":
+        fwd = forward_flops(cfg, shape.tokens, shape.seq_len, k)
+        # bwd = 2x fwd; remat full recomputes fwd inside bwd (+1x for the
+        # scanned stack); head is outside the remat region (3x), unless
+        # fused (its chunk bodies are checkpointed: 4x)
+        mult_stack = {"none": 3.0, "dots": 3.5, "full": 4.0}[k.remat]
+        mult_head = 4.0 if k.fused_head else 3.0
+        stack = (fwd["total"] - fwd["head"]) * mult_stack
+        head = fwd["head"] * mult_head
+        opt = 8.0 * 4 * cfg.param_count()  # adamw vector ops (fp32)
+        return {"total": stack + head + opt, "fwd": fwd,
+                "stack_mult": mult_stack}
+    if shape.kind == "prefill":
+        fwd = forward_flops(cfg, shape.tokens, shape.seq_len, k)
+        return {"total": fwd["total"], "fwd": fwd}
+    fwd = forward_flops(cfg, shape.global_batch, shape.seq_len, k,
+                        decode=True)
+    return {"total": fwd["total"], "fwd": fwd}
+
+
+# ---------------------------------------------------------------------------
+# First-order HBM byte model
+# ---------------------------------------------------------------------------
+
+def cell_bytes(cfg: ModelConfig, shape: ShapeConfig, k: Knobs,
+               masked_cache_write: bool | None = None) -> float:
+    """Principal global HBM flows of one step (first-order)."""
+    if masked_cache_write is None:
+        masked_cache_write = k.cache_write == "masked"
+    d = cfg.d_model
+    P = cfg.param_count()
+    act_bytes = 2  # bf16
+    B = shape.global_batch
+
+    if shape.kind == "decode":
+        total = P * act_bytes                      # stream weights once
+        # KV / state traffic per layer
+        for sym in cfg.block_pattern:
+            n = cfg.n_groups
+            if sym in ("A", "L"):
+                S_eff = min(cfg.local_window, shape.seq_len) \
+                    if sym == "L" and cfg.local_window else shape.seq_len
+                rw = 3.0 if masked_cache_write else 1.0
+                total += n * B * S_eff * cfg.n_kv_heads * cfg.d_head * 2 \
+                    * act_bytes * rw
+                if cfg.is_encoder_decoder:
+                    total += n * B * shape.seq_len * cfg.kv_dim * 2 \
+                        * act_bytes
+            elif sym == "R":
+                w = cfg.lru_width or d
+                total += n * B * w * 4 * 4
+            elif sym == "m":
+                inner = int(d * cfg.mlstm_proj_factor)
+                H = cfg.n_heads
+                total += n * B * H * (inner // H) ** 2 * 4 * 2  # C rw
+            elif sym == "s":
+                total += n * B * d * 4 * 8
+        total += B * cfg.padded_vocab * 2          # logits row
+        return total
+
+    T = shape.tokens
+    # activations: ~6 boundary tensors per layer read+write (fwd), x2 bwd,
+    # x1.5 remat recompute
+    act_mult = {"none": 3.0, "dots": 3.5, "full": 4.5}[k.remat] \
+        if shape.kind == "train" else 1.0
+    layer_traffic = cfg.n_layers * T * d * act_bytes * 6 * act_mult
+    # attention score chunks materialise pairs x heads (bf16, r+w)
+    pairs = 0.0
+    for sym in cfg.block_pattern:
+        if sym in ("A", "L"):
+            window = cfg.local_window if sym == "L" else 0
+            pairs += _attn_pairs(T, shape.seq_len, k.q_chunk, k.kv_chunk,
+                                 causal=True, window=window,
+                                 impl=k.attn_impl)
+    pairs *= cfg.n_groups
+    attn_traffic = pairs * cfg.n_heads * 4 * 2 * \
+        (act_mult if shape.kind == "train" else 1.0) / 4  # fused exp/sum
+    # weights: fwd + bwd + remat reads, grads write+read
+    w_mult = 3.0 if shape.kind == "train" else 1.0
+    weight_traffic = P * act_bytes * w_mult
+    head_bytes = T * cfg.padded_vocab
+    if shape.kind == "train":
+        head_traffic = head_bytes * (2 + 4 + 4) if not k.fused_head \
+            else head_bytes * 2.5  # streamed chunks, no global materialise
+        opt_traffic = P * 4 * 3 * 2 + P * 4        # m,v,master rw + grads
+    else:
+        head_traffic = head_bytes * 2
+        opt_traffic = 0.0
+    return layer_traffic + attn_traffic + weight_traffic + head_traffic \
+        + opt_traffic

@@ -1,0 +1,136 @@
+"""Roofline analysis (§Roofline): three terms per (arch x shape x mesh).
+
+Sources — chosen for measurement fidelity on a CPU-only harness:
+
+  * compute term  : the ANALYTIC FLOPs model (benchmarks/analytic.py),
+    validated against fully-unrolled ``cost_analysis`` measurements (XLA
+    counts while-loop bodies once, so scanned-graph flops under-report by
+    the trip count; unrolled graphs measure correctly but cost ~5-7 min of
+    compile per train cell and distort peak memory).
+  * memory term   : the analytic first-order HBM-traffic model (CPU-backend
+    ``bytes accessed`` reflects unfused op granularity, not TPU HBM flows).
+  * collective term: parsed from the compiled (scanned) HLO with while-body
+    collectives multiplied by the layer-scan trip count — the layer scan is
+    the only collective-bearing loop. Cross-pod bytes are charged at DCN
+    bandwidth, intra-pod at ICI.
+  * fits_hbm      : measured ``memory_analysis()`` of the scanned compile
+    (buffer reuse realistic).
+
+    compute_s    = flops_global / (chips * 197e12)
+    memory_s     = bytes_global / (chips * 819e9)
+    collective_s = intra_dev / 50e9 + cross_dev / 25e9
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params; the
+useful-compute ratio MODEL_FLOPS / flops_global flags remat/dispatch/causal
+waste, and roofline_fraction = ideal_time / dominant_term is the score.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Optional
+
+from benchmarks.analytic import Knobs, cell_bytes, cell_flops
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 25e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch
+
+
+def knobs_from(rec: dict) -> Knobs:
+    k = rec.get("knobs", {})
+    return Knobs(
+        attn_impl=k.get("attn_impl", "scan"),
+        moe_dispatch=k.get("moe_dispatch", "einsum"),
+        remat=k.get("remat", "full"),
+        fused_head=bool(k.get("fused_head", False)),
+        cache_write=k.get("cache_write", "masked"),
+    )
+
+
+def analyse_record(rec: dict) -> Optional[dict]:
+    if not rec.get("ok"):
+        return None
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    k = knobs_from(rec)
+
+    flops_global = cell_flops(cfg, shape, k)["total"]
+    bytes_global = cell_bytes(cfg, shape, k)
+    coll = rec.get("collectives", {})
+    intra_dev = coll.get("intra_pod", coll.get("total", 0))
+    cross_dev = coll.get("cross_pod", 0)
+
+    compute_s = flops_global / (chips * PEAK_FLOPS)
+    memory_s = bytes_global / (chips * HBM_BW)
+    collective_s = intra_dev / ICI_BW + cross_dev / DCN_BW
+
+    mf = model_flops(rec["arch"], rec["shape"])
+    bound = max(compute_s, memory_s, collective_s)
+    ideal = mf / (chips * PEAK_FLOPS)
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    temp = rec.get("memory", {}).get("temp_bytes", 0)
+    return {
+        "cell": rec["cell"],
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / max(flops_global, 1.0),
+        "roofline_fraction": ideal / bound if bound > 0 else 0.0,
+        "temp_gb": temp / 1e9,
+        "fits_hbm": temp < 16e9,
+    }
+
+
+def load_all(tag: str = "") -> List[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        rec = json.loads(open(p).read())
+        is_tagged = len(rec["cell"].split("__")) > 3
+        if bool(tag) != is_tagged:
+            continue
+        if tag and not rec["cell"].endswith("__" + tag):
+            continue
+        row = analyse_record(rec)
+        if row:
+            out.append(row)
+    return out
+
+
+def main() -> None:
+    rows = load_all()
+    print("cell,compute_s,memory_s,collective_s,dominant,useful_ratio,"
+          "roofline_fraction,temp_gb,fits_hbm")
+    for r in rows:
+        print(f"{r['cell']},{r['compute_s']:.4e},{r['memory_s']:.4e},"
+              f"{r['collective_s']:.4e},{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f},"
+              f"{r['temp_gb']:.1f},{r['fits_hbm']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark aggregator: one section per paper table + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def _section(name: str, fn) -> None:
+    print(f"\n== {name} " + "=" * max(1, 60 - len(name)))
+    t0 = time.time()
+    try:
+        fn()
+    except Exception as e:  # keep the harness running
+        print(f"ERROR,{type(e).__name__}: {e}")
+        traceback.print_exc()
+    print(f"-- {name} done in {time.time() - t0:.1f}s")
+
+
+def main() -> None:
+    from benchmarks import table1_llpr, table2_kmeans, table3_terasort
+    from benchmarks import roofline
+
+    _section("Table 1: LLPR (UDT vs TCP over the Teraflow testbed)",
+             table1_llpr.main)
+    _section("Table 2: Sphere k-means scaling", table2_kmeans.main)
+    _section("Table 3: TeraSort — Sphere vs Hadoop-style barrier",
+             table3_terasort.main)
+    _section("Roofline (from multi-pod dry-run artifacts)", roofline.main)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Table 1 — wide-area transfer performance (LLPR) per testbed route.
+
+Paper values: 360-615 Mb/s per route, LLPR 0.61-0.98 with UDT. We reproduce
+the table from the transport model and add the TCP columns the paper argues
+against (the reason Sector exists).
+"""
+from __future__ import annotations
+
+from repro.sector.topology import TERAFLOW_TESTBED
+from repro.sector.transport import llpr, tcp_throughput, udt_throughput
+
+PAPER = {
+    ("greenbelt", "daejeon"): (360, 0.78),
+    ("chicago", "pasadena"): (550, 0.83),
+    ("chicago", "greenbelt"): (615, 0.98),
+    ("chicago", "tokyo"): (490, 0.61),
+    ("tokyo", "pasadena"): (550, 0.83),
+    ("tokyo", "chicago"): (460, 0.67),
+}
+
+NBYTES = 10 * 1024**3
+
+
+def run() -> list:
+    rows = []
+    lan = TERAFLOW_TESTBED.local
+    for (a, b), (p_mbps, p_llpr) in PAPER.items():
+        wan = TERAFLOW_TESTBED.link(a, b)
+        udt_mbps = udt_throughput(wan) / 1e6
+        tcp_mbps = tcp_throughput(wan) / 1e6
+        rows.append({
+            "route": f"{a}->{b}",
+            "udt_mbps": round(udt_mbps),
+            "llpr_udt": round(llpr(NBYTES, wan, lan, "udt"), 2),
+            "llpr_tcp": round(llpr(NBYTES, wan, lan, "tcp"), 3),
+            "tcp_mbps": round(tcp_mbps, 1),
+            "paper_mbps": p_mbps,
+            "paper_llpr": p_llpr,
+        })
+    return rows
+
+
+def main() -> None:
+    print("route,udt_mbps,llpr_udt,paper_mbps,paper_llpr,tcp_mbps,llpr_tcp")
+    for r in run():
+        print(f"{r['route']},{r['udt_mbps']},{r['llpr_udt']},"
+              f"{r['paper_mbps']},{r['paper_llpr']},{r['tcp_mbps']},"
+              f"{r['llpr_tcp']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""SDSS content distribution (paper §5.2): serve a large e-science dataset
+to astronomers worldwide from replicated Sector storage.
+
+Reports per-site download throughput and LLPR, mirroring Table 1.
+
+    PYTHONPATH=src python examples/sdss_distribution.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.sector import ChunkServer, SectorClient, SectorMaster
+from repro.sector.transport import HOST_RATE
+
+tmp = tempfile.mkdtemp()
+master = SectorMaster(chunk_size=1 * 1024 * 1024)
+for i, site in enumerate(master.topology.sites * 2):
+    master.register(ChunkServer(f"s{i}", site, tmp))
+master.acl.add_member("ncdm")
+master.acl.grant_write("ncdm")
+admin = SectorClient(master, "ncdm", "chicago")
+
+# "DR5 catalog files" (scaled down): 8 files x 4 MB, 3 replicas each
+rng = np.random.default_rng(0)
+files = {}
+for i in range(8):
+    name = f"sdss/dr5/catalog_{i:02d}.fits"
+    data = rng.bytes(4 * 1024 * 1024)
+    files[name] = data
+    admin.upload(name, data, replication=3)
+print(f"published {len(files)} files, {master.stats()['chunks']} chunks, "
+      f"3-way replicated across {len(master.topology.sites)} sites\n")
+
+# astronomers at every site download; reads hit the nearest replica
+print(f"{'site':12s} {'MB':>6s} {'sim_s':>7s} {'Mb/s':>7s} {'LLPR':>6s}")
+local_rate = HOST_RATE / 1e6
+for site in master.topology.sites:
+    user = SectorClient(master, "astronomer", site)
+    nbytes = 0
+    for name, want in files.items():
+        got = user.download(name)
+        assert got == want
+        nbytes += len(got)
+    mbps = nbytes * 8 / user.log.sim_seconds / 1e6
+    print(f"{site:12s} {nbytes/1e6:6.1f} {user.log.sim_seconds:7.2f} "
+          f"{mbps:7.0f} {min(mbps/local_rate, 1.0):6.2f}")
+
+print("\n(cf. paper: 5000 accesses, 200TB served since July 2006; "
+      "LLPR 0.61-0.98)")

@@ -1,0 +1,3 @@
+from repro.core.engine import SphereEngine, SphereReport  # noqa: F401
+from repro.core.job import SphereJob, SphereStage  # noqa: F401
+from repro.core.shuffle import hash_partitioner, range_partitioner  # noqa: F401

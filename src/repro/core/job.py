@@ -1,0 +1,40 @@
+"""Sphere job model: arbitrary UDF stages over a stream of records.
+
+The paper's programming model (§4): the dataset is a stream divided into
+chunks already distributed by Sector; ``sphere.run(data, process)`` applies
+``process`` to every record in parallel where the data lives; between stages
+data is shuffled as required. Unlike MapReduce, *both* positions are
+arbitrary UDFs — a stage is any record->records function, optionally
+followed by a partitioner that reshuffles records across buckets.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+# A UDF maps a list of records (bytes each) to a list of records.
+UDF = Callable[[Sequence[bytes]], List[bytes]]
+# A partitioner maps one record to a bucket index in [0, n_buckets).
+Partitioner = Callable[[bytes, int], int]
+
+
+@dataclass
+class SphereStage:
+    name: str
+    udf: UDF
+    partitioner: Optional[Partitioner] = None  # None = no shuffle after
+    n_buckets: int = 0                         # 0 = same as worker count
+
+
+@dataclass
+class SphereJob:
+    name: str
+    input_file: str
+    stages: List[SphereStage]
+    record_size: int = 0   # fixed-size records; 0 = whole chunk is 1 record
+
+    def split_records(self, blob: bytes) -> List[bytes]:
+        if not self.record_size:
+            return [blob]
+        rs = self.record_size
+        return [blob[i:i + rs] for i in range(0, len(blob) - rs + 1, rs)]

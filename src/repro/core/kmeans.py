@@ -1,0 +1,140 @@
+"""Distributed k-means as a Sphere job (paper §5.3, Table 2).
+
+Angle's per-pcap clustering: aggregate packet data by source entity, compute
+feature points, cluster with k-means. Structured as iterated two-stage
+Sphere jobs:
+
+  stage 1 (UDF, runs where the chunks live): assign each local point to the
+      nearest centroid; emit per-centroid (sum, count) partials;
+  shuffle: partials are tiny — they all go to bucket 0 (a reduce);
+  stage 2 (UDF): fold partials into new centroids.
+
+The device-level twin (``kmeans_step_jax``) is the same computation as a
+shard_map over the mesh; the Pallas kernel in ``repro.kernels.kmeans_assign``
+accelerates the assignment hot loop on TPU.
+"""
+from __future__ import annotations
+
+import struct
+from typing import List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from repro.core.engine import SphereEngine, SphereReport
+from repro.core.job import SphereJob, SphereStage
+
+
+# --------------------------- record codecs ---------------------------------
+
+def encode_points(pts: np.ndarray) -> bytes:
+    """float32 points [N, D] -> fixed-size records."""
+    return pts.astype("<f4").tobytes()
+
+
+def decode_points(blob: bytes, dim: int) -> np.ndarray:
+    return np.frombuffer(blob, "<f4").reshape(-1, dim)
+
+
+def _encode_partial(sums: np.ndarray, counts: np.ndarray) -> bytes:
+    k, d = sums.shape
+    return struct.pack("<II", k, d) + sums.astype("<f8").tobytes() + \
+        counts.astype("<i8").tobytes()
+
+
+def _decode_partial(blob: bytes) -> Tuple[np.ndarray, np.ndarray]:
+    k, d = struct.unpack("<II", blob[:8])
+    off = 8
+    sums = np.frombuffer(blob[off:off + 8 * k * d], "<f8").reshape(k, d)
+    off += 8 * k * d
+    counts = np.frombuffer(blob[off:off + 8 * k], "<i8")
+    return sums.copy(), counts.copy()
+
+
+# --------------------------- Sphere job ------------------------------------
+
+def kmeans_sphere(engine: SphereEngine, file: str, dim: int, k: int,
+                  iters: int, seed: int = 0
+                  ) -> Tuple[np.ndarray, SphereReport]:
+    """Run k-means over a Sector file of float32 points via Sphere."""
+    rng = np.random.default_rng(seed)
+    centroids = rng.normal(size=(k, dim)).astype(np.float32)
+    report = SphereReport()
+
+    for _ in range(iters):
+        c = centroids.copy()
+
+        def assign_udf(records: List[bytes]) -> List[bytes]:
+            out = []
+            for blob in records:
+                pts = decode_points(blob, dim)
+                d2 = ((pts[:, None, :] - c[None]) ** 2).sum(-1)
+                a = d2.argmin(1)
+                sums = np.zeros((k, dim))
+                counts = np.zeros(k, np.int64)
+                np.add.at(sums, a, pts)
+                np.add.at(counts, a, 1)
+                out.append(_encode_partial(sums, counts))
+            return out
+
+        job = SphereJob(
+            name="kmeans-assign", input_file=file,
+            stages=[SphereStage("assign", assign_udf,
+                                partitioner=lambda r, n: 0)],  # reduce to 0
+            record_size=0)
+        outputs, report = engine.run(job, report)
+        sums = np.zeros((k, dim))
+        counts = np.zeros(k, np.int64)
+        for blob in outputs:
+            off = 0
+            while off < len(blob):
+                kk, dd = struct.unpack("<II", blob[off:off + 8])
+                size = 8 + 8 * kk * dd + 8 * kk
+                s, n = _decode_partial(blob[off:off + size])
+                sums += s
+                counts += n
+                off += size
+        nz = counts > 0
+        centroids[nz] = (sums[nz] / counts[nz, None]).astype(np.float32)
+    return centroids, report
+
+
+# --------------------------- JAX twin ---------------------------------------
+
+def kmeans_step_jax(points: jax.Array, centroids: jax.Array,
+                    mesh: Mesh | None = None, axis: str = "data"):
+    """One k-means step. points [N, D] (sharded over axis when mesh given),
+    centroids [K, D] replicated. Returns (new_centroids, inertia)."""
+
+    def local(pts, c):
+        d2 = (jnp.sum(pts**2, 1)[:, None] - 2 * pts @ c.T
+              + jnp.sum(c**2, 1)[None])
+        a = jnp.argmin(d2, 1)
+        oh = jax.nn.one_hot(a, c.shape[0], dtype=pts.dtype)
+        sums = oh.T @ pts
+        counts = oh.sum(0)
+        inertia = jnp.take_along_axis(d2, a[:, None], 1).sum()
+        return sums, counts, inertia
+
+    if mesh is None:
+        sums, counts, inertia = local(points, centroids)
+    else:
+        def body(pts, c):
+            s, n, i = local(pts, c)
+            return (lax.psum(s, axis), lax.psum(n, axis),
+                    lax.psum(i, axis))
+        fn = _shard_map(body, mesh=mesh, in_specs=(P(axis), P()),
+                        out_specs=(P(), P(), P()))
+        sums, counts, inertia = fn(points, centroids)
+    new_c = jnp.where(counts[:, None] > 0,
+                      sums / jnp.maximum(counts[:, None], 1), centroids)
+    return new_c, inertia

@@ -1,0 +1,40 @@
+"""Partitioners for the Sphere shuffle."""
+from __future__ import annotations
+
+import hashlib
+from typing import Callable, List, Sequence
+
+
+def hash_partitioner(key_bytes: int = 8) -> Callable[[bytes, int], int]:
+    def part(record: bytes, n: int) -> int:
+        h = hashlib.md5(record[:key_bytes]).digest()
+        return int.from_bytes(h[:4], "big") % n
+    return part
+
+
+def range_partitioner(boundaries: Sequence[bytes]) -> Callable[[bytes, int], int]:
+    """TeraSort-style: bucket by key position among sorted boundaries."""
+    bnd = list(boundaries)
+
+    def part(record: bytes, n: int) -> int:
+        key = record[:len(bnd[0])] if bnd else record
+        lo, hi = 0, len(bnd)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if key > bnd[mid]:
+                lo = mid + 1
+            else:
+                hi = mid
+        return min(lo, n - 1)
+    return part
+
+
+def sample_boundaries(records: Sequence[bytes], n_buckets: int,
+                      key_bytes: int = 10) -> List[bytes]:
+    """Sample keys to build balanced range boundaries (TeraSort pre-pass)."""
+    keys = sorted(r[:key_bytes] for r in records)
+    if not keys or n_buckets <= 1:
+        return []
+    step = len(keys) / n_buckets
+    return [keys[min(int(step * i) - 1, len(keys) - 1)]
+            for i in range(1, n_buckets)]

@@ -1,0 +1,3 @@
+from repro.data.dataset import SectorTokenDataset  # noqa: F401
+from repro.data.pipeline import DataPipeline  # noqa: F401
+from repro.data.synth import write_synthetic_corpus  # noqa: F401

@@ -1,0 +1,54 @@
+"""Device feed: batches -> sharded jax arrays, with simple lookahead.
+
+On a real multi-host job each host feeds its local shard
+(``jax.make_array_from_process_local_data``); on this single-process harness
+we place the global batch with the mesh sharding directly. Prefetch depth 2
+overlaps host-side chunk reads with device steps.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.data.dataset import Cursor, SectorTokenDataset
+from repro.parallel.sharding import ParallelConfig, batch_spec
+
+
+class DataPipeline:
+    def __init__(self, dataset: SectorTokenDataset, batch: int,
+                 pcfg: ParallelConfig, prefetch: int = 2):
+        self.dataset = dataset
+        self.batch = batch
+        self.pcfg = pcfg
+        self.prefetch = prefetch
+        self.cursor = Cursor()
+
+    def _place(self, host_batch: dict) -> dict:
+        if self.pcfg.mesh is None:
+            return {k: jnp.asarray(v) for k, v in host_batch.items()}
+        sh = NamedSharding(self.pcfg.mesh,
+                           batch_spec(self.pcfg, None))
+        return {k: jax.device_put(v, sh) for k, v in host_batch.items()}
+
+    def __iter__(self) -> Iterator[dict]:
+        gen = self.dataset.batches(self.batch, self.cursor)
+        queue: deque = deque()
+        while True:
+            while len(queue) < self.prefetch:
+                host, cur = next(gen)
+                queue.append((self._place(host), cur))
+            placed, cur = queue.popleft()
+            self.cursor = cur
+            yield placed
+
+    # resume support
+    def state_dict(self) -> dict:
+        return self.cursor.as_dict()
+
+    def load_state_dict(self, d: dict) -> None:
+        self.cursor = Cursor.from_dict(d)

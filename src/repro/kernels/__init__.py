@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the Sphere/LM compute hot-spots.
+
+Each kernel ships as <name>/{kernel.py (pallas_call + BlockSpec), ops.py
+(jit'd wrapper with backend dispatch), ref.py (pure-jnp oracle)} and is
+swept against its oracle over shapes/dtypes in tests (interpret mode on
+CPU; Mosaic on real TPU).
+"""
+from repro.kernels.bucket_partition import bucket_partition  # noqa: F401
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.kmeans_assign import kmeans_assign  # noqa: F401
+from repro.kernels.rg_lru_scan import rg_lru_scan  # noqa: F401

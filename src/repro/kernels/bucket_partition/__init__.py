@@ -1,0 +1,2 @@
+from repro.kernels.bucket_partition.ops import bucket_partition  # noqa: F401
+from repro.kernels.bucket_partition.ref import bucket_partition_ref  # noqa: F401

@@ -1,0 +1,20 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.bucket_partition.kernel import bucket_partition_call
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("n_buckets", "block_n", "interpret"))
+def bucket_partition(keys, bounds, *, n_buckets: int, block_n: int = 2048,
+                     interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return bucket_partition_call(keys, bounds, n_buckets=n_buckets,
+                                 block_n=block_n, interpret=interpret)

@@ -1,0 +1,10 @@
+"""Oracle for the bucket partitioner."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bucket_partition_ref(keys, bounds, n_buckets: int):
+    ids = jnp.searchsorted(bounds, keys, side="right").astype(jnp.int32)
+    hist = jnp.bincount(ids, length=n_buckets).astype(jnp.int32)
+    return ids, hist

@@ -1,0 +1,134 @@
+"""Flash attention TPU kernel (pl.pallas_call + explicit VMEM BlockSpecs).
+
+TPU-native adaptation (DESIGN.md §2): instead of a CUDA warp-level design,
+tiling is chosen for the MXU (128-aligned [bq, d] x [d, bk] matmuls) and the
+VMEM hierarchy: each grid step holds one q tile, one kv tile and the fp32
+softmax state (m, l, acc) in VMEM scratch that persists across the innermost
+(kv) grid dimension — TPU grids execute sequentially over the last axis, so
+the scratch implements the online-softmax recurrence without HBM traffic.
+
+Grid: (batch*heads, T/bq, S/bk). Causal and sliding-window masks are applied
+in-kernel; fully-masked kv tiles are skipped with pl.when (no MXU work).
+
+Supports GQA natively: the kv head index map collapses the query-group dim,
+so k/v tiles are fetched once per kv head, not per q head.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            seq_q: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_first = qi * bq            # first query position of this tile
+    q_last = q_first + bq - 1
+    k_first = ki * bk
+    k_last = k_first + bk - 1
+
+    live = True
+    if causal:
+        live = k_first <= q_last                   # not strictly future
+    if window:
+        live = jnp.logical_and(live, k_last > q_first - window)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)           # [bq, d]
+        k = k_ref[0].astype(jnp.float32)           # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_first + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_first + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < seq_k
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_prev * alpha + p.sum(axis=1)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_hm(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool = True, window: int = 0,
+                       block_q: int = 128, block_k: int = 128,
+                       interpret: bool = False) -> jax.Array:
+    """Head-major flash attention.
+
+    q: [BHq, T, d]; k, v: [BHk, S, d] with BHq = BHk * group.
+    """
+    bhq, seq_q, d = q.shape
+    bhk, seq_k, _ = k.shape
+    assert bhq % bhk == 0
+    group = bhq // bhk
+    bq = min(block_q, seq_q)
+    bk = min(block_k, seq_k)
+    # pad sequences up to tile multiples (masked in-kernel via seq_k bound)
+    pq = (-seq_q) % bq
+    pk = (-seq_k) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    nq = q.shape[1] // bq
+    nk = k.shape[1] // bk
+
+    kern = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(d), causal=causal, window=window,
+        bq=bq, bk=bk, seq_q=seq_q, seq_k=seq_k)
+
+    out = pl.pallas_call(
+        kern,
+        grid=(bhq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, q.shape[1], d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max  m
+            pltpu.VMEM((bq,), jnp.float32),      # running sum  l
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if pq:
+        out = out[:, :seq_q]
+    return out

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q: [BHq, T, d]; k, v: [BHk, S, d]; GQA by head-group repetition."""
+    bhq, T, d = q.shape
+    bhk, S, _ = k.shape
+    g = bhq // bhk
+    k = jnp.repeat(k, g, axis=0)
+    v = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    tpos = jnp.arange(T)[:, None]
+    spos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= spos <= tpos
+    if window:
+        mask &= tpos - spos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.kmeans_assign.ops import kmeans_assign  # noqa: F401
+from repro.kernels.kmeans_assign.ref import kmeans_assign_ref  # noqa: F401

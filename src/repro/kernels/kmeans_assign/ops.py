@@ -1,0 +1,19 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.kmeans_assign.kernel import kmeans_assign_call
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign(x, c, *, block_n: int = 1024,
+                  interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return kmeans_assign_call(x, c, block_n=block_n, interpret=interpret)

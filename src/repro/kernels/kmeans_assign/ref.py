@@ -1,0 +1,11 @@
+"""Oracle for the k-means assignment kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(x, c):
+    d2 = (jnp.sum(x.astype(jnp.float32)**2, 1)[:, None]
+          - 2 * x.astype(jnp.float32) @ c.astype(jnp.float32).T
+          + jnp.sum(c.astype(jnp.float32)**2, 1)[None])
+    return jnp.argmin(d2, 1).astype(jnp.int32), jnp.min(d2, 1)

@@ -1,0 +1,2 @@
+from repro.kernels.rg_lru_scan.ops import rg_lru_scan  # noqa: F401
+from repro.kernels.rg_lru_scan.ref import lru_scan_ref  # noqa: F401

@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init). 512 placeholder host devices let
+# ``jax.make_mesh`` build the production meshes for lower+compile dry-runs.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs ShapeDtypeStruct stand-ins for params, optimizer state,
+     batch and decode caches (no allocation),
+  3. ``jit(step).lower(...).compile()`` with explicit in/out shardings,
+  4. records ``memory_analysis()`` (proves the cell fits HBM),
+     ``cost_analysis()`` (FLOPs / bytes for §Roofline) and the collective
+     byte totals parsed from the compiled HLO (all-gather / all-reduce /
+     reduce-scatter / all-to-all / collective-permute), split into intra-pod
+     (ICI) vs cross-pod (DCN) traffic,
+  5. writes ``experiments/dryrun/<arch>__<shape>__<mesh>[__tag].json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all            # every cell, both meshes
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, cells, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import model
+from repro.models.inputs import input_specs
+from repro.parallel.sharding import ParallelConfig, param_specs_for
+from repro.train import optim
+from repro.train.step import (batch_specs_for, cache_specs_for,
+                              make_prefill_step, make_serve_step,
+                              make_train_step, opt_state_specs_for,
+                              to_shardings)
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# --- TPU v5e hardware constants (roofline denominators) --------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (intra-pod)
+DCN_BW = 25e9                # bytes/s per chip share (cross-pod hop)
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:\S+ = )?\(?([a-z0-9_\[\]{},/ ]*?)\)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[dims]' HLO shape string."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    sizes = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+             "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+             "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * sizes.get(dt, 4)
+
+
+def parse_collectives(hlo_text: str, pod_stride: int = 256,
+                      loop_trip: int = 1) -> dict:
+    """Sum result bytes of every collective op; split intra- vs cross-pod.
+
+    Cross-pod detection: a replica group containing device ids that differ
+    by >= pod_stride spans pods (mesh order is (pod, data, model)).
+
+    Scan correction: collectives whose op_name metadata contains "/while/"
+    execute once per scan iteration (the layer loop — the only
+    collective-bearing loop in this framework), so their bytes are
+    multiplied by ``loop_trip`` (= n_groups for the cell's arch). Raw
+    (uncorrected) totals are kept under ``raw_total``.
+    """
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    cross = 0
+    intra = 0
+    raw_total = 0
+    for line in hlo_text.splitlines():
+        m = re.search(
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start)?\(", line)
+        if not m or "-done" in line[:line.find("(")]:
+            continue
+        eq = line.find(" = ")
+        if eq < 0:
+            continue
+        rhs = line[eq + 3:]
+        shapes = re.findall(r"(?:f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|"
+                            r"s8|u8|pred|f8e4m3fn|f8e5m2)\[[0-9,]*\]",
+                            rhs[:rhs.find("(")] if "(" in rhs else rhs)
+        nbytes = sum(_shape_bytes(s) for s in shapes)
+        raw_total += nbytes
+        mult = loop_trip if "/while/" in line else 1
+        nbytes *= mult
+        out[m.group(1)] += nbytes
+        groups = re.search(r"replica_groups=\{?\{([0-9, ]+)\}", line)
+        is_cross = False
+        if groups:
+            ids = [int(x) for x in groups.group(1).replace(" ", "").split(",")
+                   if x]
+            if ids and (max(ids) - min(ids)) >= pod_stride:
+                is_cross = True
+        if is_cross:
+            cross += nbytes
+        else:
+            intra += nbytes
+    out["total"] = sum(out[k] for k in
+                       ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+    out["cross_pod"] = cross
+    out["intra_pod"] = intra
+    out["raw_total"] = raw_total
+    out["loop_trip"] = loop_trip
+    return out
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, pcfg: ParallelConfig,
+               ocfg: optim.AdamWConfig):
+    """Returns (fn, args_specs as ShapeDtypeStructs, in_shardings,
+    out_shardings, donate)."""
+    mesh = pcfg.mesh
+    pshapes = model.param_shapes(cfg)
+    pspecs = param_specs_for(pshapes, pcfg)
+    batch_tree = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        ostate = optim.state_shapes(pshapes, ocfg)
+        if ocfg.error_feedback and pcfg.multi_pod:
+            npods = pcfg.axis_sizes.get("pod", 1)
+            ostate["ef"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((npods,) + s.shape, s.dtype),
+                pshapes)
+        ospecs = opt_state_specs_for(pshapes, pcfg, ocfg)
+        bspecs = batch_specs_for(batch_tree, pcfg)
+        fn = make_train_step(cfg, pcfg, ocfg,
+                             optim.warmup_cosine(3e-4, 1000, 100_000))
+        args = (pshapes, ostate, batch_tree)
+        in_specs = (pspecs, ospecs, bspecs)
+        out_specs = (pspecs, ospecs,
+                     None)  # metrics: let XLA choose (scalars)
+        donate = (0, 1) if pcfg.donate else ()
+        return fn, args, in_specs, out_specs, donate
+
+    if shape.kind == "prefill":
+        bspecs = batch_specs_for(batch_tree, pcfg)
+        fn = make_prefill_step(cfg, pcfg, max_len=shape.seq_len)
+        args = (pshapes, batch_tree)
+        return fn, args, (pspecs, bspecs), None, ()
+
+    # decode
+    cross_len = shape.seq_len if cfg.is_encoder_decoder else 0
+    cache_tree = model.cache_shapes(cfg, shape.global_batch, shape.seq_len,
+                                    cross_len=cross_len)
+    cspecs = cache_specs_for(cache_tree, pcfg)
+    b = shape.global_batch
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    bspec = batch_specs_for({"t": tok, "p": pos}, pcfg)
+    fn = make_serve_step(cfg, pcfg)
+    args = (pshapes, cache_tree, tok, pos)
+    in_specs = (pspecs, cspecs, bspec["t"], bspec["p"])
+    out_specs = (bspec["t"], cspecs)
+    donate = (1,) if pcfg.donate else ()
+    return fn, args, in_specs, out_specs, donate
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             knobs: dict | None = None, tag: str = "",
+             save: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pcfg = ParallelConfig(mesh=mesh, multi_pod=multi_pod,
+                          **(knobs or {}))
+    ocfg = optim.AdamWConfig(
+        error_feedback=(pcfg.compress_pod == "int8_ef"))
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    t0 = time.time()
+    rec = {"cell": cell_id, "arch": arch, "shape": shape_name,
+           "mesh": mesh_name, "knobs": knobs or {}, "ok": False}
+    try:
+        fn, args, in_specs, out_specs, donate = build_cell(
+            cfg, shape, pcfg, ocfg)
+        in_sh = to_shardings(in_specs, mesh)
+        out_sh = to_shardings(out_specs, mesh) if out_specs is not None \
+            else None
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+                "peak_bytes": int(getattr(ma, "temp_size_in_bytes", 0))
+                + int(getattr(ma, "argument_size_in_bytes", 0)),
+            }
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory"] = {"error": str(e)}
+
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float))} if ca else {}
+
+        hlo = compiled.as_text()
+        trip = 1 if pcfg.unroll_scans else cfg.n_groups
+        rec["collectives"] = parse_collectives(hlo, loop_trip=trip)
+        rec["hlo_bytes"] = len(hlo)
+        rec["timing"] = {"lower_s": t_lower, "compile_s": t_compile}
+        rec["ok"] = True
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = time.time() - t0
+
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        (OUT_DIR / f"{cell_id}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every cell; both meshes")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--knob", action="append", default=[],
+                    help="k=v ParallelConfig overrides (repeatable)")
+    args = ap.parse_args(argv)
+
+    knobs = {}
+    for kv in args.knob:
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        elif v.isdigit():
+            v = int(v)
+        knobs[k] = v
+
+    todo = []
+    if args.all:
+        for arch, shape in cells():
+            todo.append((arch, shape, False))
+            todo.append((arch, shape, True))
+    else:
+        todo.append((args.arch, args.shape, args.multi_pod))
+
+    n_ok = 0
+    for arch, shape, mp in todo:
+        mesh_name = "2x16x16" if mp else "16x16"
+        cell_id = f"{arch}__{shape}__{mesh_name}" + \
+            (f"__{args.tag}" if args.tag else "")
+        if args.skip_existing and (OUT_DIR / f"{cell_id}.json").exists():
+            prior = json.loads((OUT_DIR / f"{cell_id}.json").read_text())
+            if prior.get("ok"):
+                n_ok += 1
+                print(f"[skip] {cell_id} (ok)")
+                continue
+        rec = run_cell(arch, shape, multi_pod=mp, knobs=knobs, tag=args.tag)
+        status = "OK " if rec["ok"] else "FAIL"
+        flops = rec.get("cost", {}).get("flops", 0)
+        coll = rec.get("collectives", {}).get("total", 0)
+        print(f"[{status}] {cell_id} wall={rec['wall_s']:.1f}s "
+              f"flops/dev={flops:.3e} coll_bytes/dev={coll:.3e}"
+              + ("" if rec["ok"] else f" err={rec.get('error')}"))
+        n_ok += rec["ok"]
+    print(f"{n_ok}/{len(todo)} cells OK")
+    return 0 if n_ok == len(todo) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

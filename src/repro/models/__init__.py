@@ -1,0 +1,10 @@
+from repro.models import model  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_shapes,
+    prefill,
+)

@@ -1,0 +1,476 @@
+"""GQA attention: chunked online-softmax (train/prefill) + cached decode.
+
+Three implementations share one numerics contract (tested against each other):
+
+  * ``scan``       -- lax.scan over (q-chunk x kv-chunk) with causal masking.
+                      Compact HLO; computes the full rectangle (2x causal
+                      waste). The paper-faithful baseline.
+  * ``triangular`` -- statically unrolled lower-triangular chunk pairs; only
+                      the diagonal chunk is masked. Halves prefill/train
+                      attention FLOPs (a §Perf iteration).
+  * ``pallas``     -- the flash-attention TPU kernel in repro/kernels
+                      (real-TPU path; validated in interpret mode).
+
+Local (sliding-window) layers slice a [window + q_chunk] KV strip per q-chunk
+with a dynamic start, so windowed attention costs O(T * window) instead of
+O(T^2) in every implementation.
+
+Decode attends a single query against a **full cache** ([B, S, K, D],
+positions implicit) or a **ring cache** ([B, W, K, D] plus an explicit
+``kpos`` slot-position array) for windowed layers — the ring bound is what
+makes ``long_500k`` decodable for gemma3 / recurrentgemma.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import sds, soft_cap
+from repro.parallel.sharding import ParallelConfig, batch_spec, constrain, heads_spec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def shapes(cfg: ModelConfig, *, cross: bool = False) -> dict:
+    pd = cfg.param_dtype
+    d = cfg.d_model
+    out = {
+        "wq": sds((d, cfg.q_dim), pd),
+        "wk": sds((d, cfg.kv_dim), pd),
+        "wv": sds((d, cfg.kv_dim), pd),
+        "wo": sds((cfg.q_dim, d), pd),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = sds((cfg.q_dim,), pd)
+        out["bk"] = sds((cfg.kv_dim,), pd)
+        out["bv"] = sds((cfg.kv_dim,), pd)
+    if cfg.qk_norm:
+        out["q_norm"] = sds((cfg.d_head,), pd)
+        out["k_norm"] = sds((cfg.d_head,), pd)
+    return out
+
+
+def _project_q(p, x, cfg: ModelConfig):
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(x.shape[:-1] + (cfg.n_heads, cfg.d_head))
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["q_norm"], cfg.norm_eps)
+    return q
+
+
+def _project_kv(p, x, cfg: ModelConfig):
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(x.shape[:-1] + (cfg.n_kv_heads, cfg.d_head))
+    v = v.reshape(x.shape[:-1] + (cfg.n_kv_heads, cfg.d_head))
+    if cfg.qk_norm:
+        k = common.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Core chunked attention (q: [B,T,K,G,D], k/v: [B,S,K,D])
+# ---------------------------------------------------------------------------
+
+def _block(qc, kc, vc, qpos, kpos, *, causal, window, scale, softcap, extra_mask=None):
+    """One (q-chunk, kv-chunk) online-softmax block.
+
+    Returns (scores_exp_numerator p, row_max m, None) pieces folded by caller.
+    qc: [B,Tq,K,G,D]; kc/vc: [B,Sk,K,D]; qpos: [Tq] or [B,Tq]; kpos: [Sk] or [B,Sk].
+    """
+    s = jnp.einsum("btkgd,bskd->bkgts", qc, kc,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = soft_cap(s, softcap)
+    mask = None
+    if causal:
+        q_b = qpos[..., :, None]
+        k_b = kpos[..., None, :]
+        mask = k_b <= q_b
+        if window:
+            mask = mask & (q_b - k_b < window)
+    if extra_mask is not None:
+        mask = extra_mask if mask is None else (mask & extra_mask)
+    if mask is not None:
+        while mask.ndim < s.ndim:  # [.. ,t,s] -> broadcast over B,K,G
+            mask = mask[..., None, :, :] if mask.ndim >= 2 else mask
+        # mask now [*,1?,t,s]; rely on broadcasting from [t,s] or [B,1,1,t,s]
+        s = jnp.where(mask, s, NEG_INF)
+    return s
+
+
+def _fold(carry, s, vc):
+    m, l, acc = carry
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l = l * alpha + p.sum(axis=-1)
+    pv = jnp.einsum("bkgts,bskd->bkgtd", p.astype(vc.dtype), vc,
+                    preferred_element_type=jnp.float32)
+    acc = acc * alpha[..., None] + pv
+    return m_new, l, acc
+
+
+def _finish(m, l, acc, B, Tq, K, G, D, dtype):
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # [B,K,G,T,D] -> [B,T,K*G,D]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, K * G, D)
+    return out.astype(dtype)
+
+
+def chunked_attention(
+    q: jax.Array,  # [B, T, H, D]
+    k: jax.Array,  # [B, S, K, D]
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    q_chunk: int = 2048,
+    kv_chunk: int = 2048,
+    impl: str = "scan",
+    softcap: float = 0.0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Memory-efficient attention; never materializes [T, S] in full."""
+    B, T, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(D)
+    q = q.reshape(B, T, K, G, D)
+
+    qc_sz = min(q_chunk, T)
+    while T % qc_sz:
+        qc_sz //= 2
+    kc_sz = min(kv_chunk, S)
+    while S % kc_sz:
+        kc_sz //= 2
+    nq, ns = T // qc_sz, S // kc_sz
+
+    if window and causal and window + qc_sz < S:
+        return _windowed(q, k, v, B, T, S, K, G, D, qc_sz, window, scale,
+                         softcap, q_offset,
+                         unroll=impl in ("rect", "triangular"))
+
+    if impl == "triangular" and causal:
+        return _unrolled(q, k, v, B, T, S, K, G, D, qc_sz, kc_sz, window,
+                         scale, softcap, q_offset, causal=True,
+                         skip_future=True)
+    if impl == "rect":
+        # statically unrolled FULL rectangle (masked): numerically identical
+        # to "scan" and costs the same FLOPs, but visible to cost_analysis
+        # (XLA counts a while-loop body once). Measurement twin of "scan".
+        return _unrolled(q, k, v, B, T, S, K, G, D, qc_sz, kc_sz, window,
+                         scale, softcap, q_offset, causal=causal,
+                         skip_future=False)
+
+    # --- scan impl: outer scan over q chunks, inner scan over kv chunks -----
+    q_r = q.reshape(B, nq, qc_sz, K, G, D).transpose(1, 0, 2, 3, 4, 5)
+    k_r = k.reshape(B, ns, kc_sz, K, D).transpose(1, 0, 2, 3, 4)
+    v_r = v.reshape(B, ns, kc_sz, K, D).transpose(1, 0, 2, 3, 4)
+
+    def per_q(_, qi_qc):
+        qi, qc = qi_qc
+        qpos = q_offset + qi * qc_sz + jnp.arange(qc_sz)
+
+        def per_kv(carry, ki_kc):
+            ki, kc, vc = ki_kc
+            kpos = ki * kc_sz + jnp.arange(kc_sz)
+            s = _block(qc, kc, vc, qpos, kpos, causal=causal, window=window,
+                       scale=scale, softcap=softcap)
+            return _fold(carry, s, vc), None
+
+        m0 = jnp.full((B, K, G, qc_sz), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, qc_sz), jnp.float32)
+        a0 = jnp.zeros((B, K, G, qc_sz, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(per_kv, (m0, l0, a0),
+                                  (jnp.arange(ns), k_r, v_r))
+        return None, _finish(m, l, acc, B, qc_sz, K, G, D, q.dtype)
+
+    _, outs = lax.scan(per_q, None, (jnp.arange(nq), q_r))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, T, H, D)
+
+
+def _unrolled(q, k, v, B, T, S, K, G, D, qc_sz, kc_sz, window, scale,
+              softcap, q_offset, *, causal, skip_future):
+    """Statically unrolled chunk pairs.
+
+    ``skip_future=True`` is the triangular optimisation (strictly-future and
+    strictly-out-of-window chunks never touch the MXU; interior chunks skip
+    the mask). ``skip_future=False`` computes the full masked rectangle —
+    numerically identical to the ``scan`` impl with identical FLOPs, used
+    for measurement (cost_analysis counts a while-loop body only once)."""
+    nq, ns = T // qc_sz, S // kc_sz
+    outs = []
+    for qi in range(nq):
+        qc = q[:, qi * qc_sz:(qi + 1) * qc_sz]
+        q_start = q_offset + qi * qc_sz
+        q_end = q_start + qc_sz
+        qpos = q_start + jnp.arange(qc_sz)
+        m = jnp.full((B, K, G, qc_sz), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, K, G, qc_sz), jnp.float32)
+        acc = jnp.zeros((B, K, G, qc_sz, D), jnp.float32)
+        for ki in range(ns):
+            k_start = ki * kc_sz
+            k_end = k_start + kc_sz
+            if skip_future and causal:
+                if k_start >= q_end:
+                    break  # strictly future chunk
+                if window and k_end - 1 < q_start - window + 1:
+                    continue  # strictly out of the sliding window
+            if skip_future:
+                # only the diagonal straddler (or any chunk, when windowed)
+                # needs masking
+                needs_mask = (k_end > q_start) or bool(window)
+            else:
+                needs_mask = causal
+            s = _block(qc, kc := k[:, k_start:k_end], vc := v[:, k_start:k_end],
+                       qpos, k_start + jnp.arange(kc_sz),
+                       causal=needs_mask, window=window if needs_mask else 0,
+                       scale=scale, softcap=softcap)
+            m, l, acc = _fold((m, l, acc), s, vc)
+        outs.append(_finish(m, l, acc, B, qc_sz, K, G, D, q.dtype))
+    return jnp.concatenate(outs, axis=1).reshape(B, T, K * G, D)
+
+
+def _windowed(q, k, v, B, T, S, K, G, D, qc_sz, window, scale, softcap,
+              q_offset, *, unroll=False):
+    """Sliding-window attention: slice [window + qc] KV strip per q chunk.
+
+    ``unroll=True`` replaces the q-chunk scan with a static python loop so
+    cost_analysis sees every chunk (measurement mode)."""
+    strip = min(common.round_up(window + qc_sz, 128), S)
+    nq = T // qc_sz
+
+    def one_q(qi, qc):
+        q_start = q_offset + qi * qc_sz
+        start = jnp.clip(q_start + qc_sz - strip, 0, S - strip)
+        kc = lax.dynamic_slice_in_dim(k, start, strip, axis=1)
+        vc = lax.dynamic_slice_in_dim(v, start, strip, axis=1)
+        qpos = q_start + jnp.arange(qc_sz)
+        kpos = start + jnp.arange(strip)
+        s = _block(qc, kc, vc, qpos, kpos, causal=True, window=window,
+                   scale=scale, softcap=softcap)
+        m = jnp.full((B, K, G, qc_sz), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, K, G, qc_sz), jnp.float32)
+        acc = jnp.zeros((B, K, G, qc_sz, D), jnp.float32)
+        m, l, acc = _fold((m, l, acc), s, vc)
+        return _finish(m, l, acc, B, qc_sz, K, G, D, q.dtype)
+
+    if unroll:
+        outs = [one_q(qi, q[:, qi * qc_sz:(qi + 1) * qc_sz])
+                for qi in range(nq)]
+        return jnp.concatenate(outs, axis=1).reshape(B, T, K * G, D)
+
+    q_r = q.reshape(B, nq, qc_sz, K, G, D).transpose(1, 0, 2, 3, 4, 5)
+    _, outs = lax.scan(lambda _, xs: (None, one_q(xs[0], xs[1])),
+                       None, (jnp.arange(nq), q_r))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, T, K * G, D)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq: int, *, ring: bool,
+                 window: int = 0) -> dict:
+    """Decode cache for one attention layer (compute dtype)."""
+    ct = cfg.compute_dtype
+    slots = min(window, seq) if ring and window else seq
+    out = {
+        "k": sds((batch, slots, cfg.n_kv_heads, cfg.d_head), ct),
+        "v": sds((batch, slots, cfg.n_kv_heads, cfg.d_head), ct),
+    }
+    if ring and window and window < seq:
+        out["kpos"] = sds((batch, slots), jnp.int32)
+    return out
+
+
+def init_cache(cfg, batch, seq, *, ring, window=0):
+    tree = cache_shapes(cfg, batch, seq, ring=ring, window=window)
+    def zero(s):
+        if s.dtype == jnp.int32:
+            return jnp.full(s.shape, -1, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+    return jax.tree.map(zero, tree)
+
+
+def _masked_write(buf, new, slot):
+    """buf: [B,S,...], new: [B,1,...], slot: [B] int32 — shardable update
+    (elementwise select; works with the sequence dim sharded, at the cost
+    of rewriting the whole cache: ~3x cache HBM traffic per step)."""
+    onehot = jnp.arange(buf.shape[1])[None, :] == slot[:, None]  # [B,S]
+    oh = onehot.reshape(onehot.shape + (1,) * (buf.ndim - 2))
+    return jnp.where(oh, new.astype(buf.dtype), buf)
+
+
+def _scatter_write(buf, new, slot):
+    """In-place one-slot update via per-sample dynamic_update_slice:
+    touches only the written slot (1x traffic) but XLA reshards when the
+    sequence dim is partitioned — use when S is unsharded."""
+    def one(b, n, s):
+        idx = (s,) + (0,) * (b.ndim - 1)  # b: per-sample [S, ...]
+        return lax.dynamic_update_slice(b, n.astype(b.dtype), idx)
+    return jax.vmap(one)(buf, new, slot)
+
+
+def update_cache(cache: dict, k_new, v_new, pos, mode: str = "masked"):
+    """Append one token (k/v: [B,1,K,D]) at ``pos`` ([B] int32)."""
+    write = _scatter_write if mode == "scatter" else _masked_write
+    is_ring = "kpos" in cache
+    slots = cache["k"].shape[1]
+    slot = (pos % slots) if is_ring else pos
+    out = dict(cache)
+    out["k"] = write(cache["k"], k_new, slot)
+    out["v"] = write(cache["v"], v_new, slot)
+    if is_ring:
+        out["kpos"] = write(cache["kpos"][..., None],
+                            pos[:, None, None], slot)[..., 0]
+    return out
+
+
+def decode_attention(q, cache: dict, pos, *, window: int = 0,
+                     softcap: float = 0.0):
+    """q: [B,1,H,D] against cache; returns [B,1,H,D]."""
+    B, _, H, D = q.shape
+    k, v = cache["k"], cache["v"]
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, 1, K, G, D)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = soft_cap(s, softcap)
+    if "kpos" in cache:
+        kpos = cache["kpos"]  # [B,S] true positions, -1 = empty
+        valid = (kpos >= 0) & (kpos <= pos[:, None])
+        if window:
+            valid &= pos[:, None] - kpos < window
+    else:
+        kpos = jnp.arange(S)[None, :]
+        valid = kpos <= pos[:, None]
+        if window:
+            valid &= pos[:, None] - kpos < window
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer-level apply
+# ---------------------------------------------------------------------------
+
+def apply(
+    params: dict,
+    x: jax.Array,                      # [B, T, d_model]
+    *,
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    layer_sym: str,                    # "A" | "L"
+    positions: jax.Array,              # [B, T] (or [B] for decode)
+    mode: str,                         # "train" | "prefill" | "decode"
+    cache: Optional[dict] = None,
+    memory_kv: Optional[tuple] = None, # cross-attention (k, v) from encoder
+    max_len: int = 0,                  # prefill: decode-cache capacity
+):
+    """Returns (out [B,T,d_model], new_cache)."""
+    is_local = layer_sym == "L"
+    window = cfg.local_window if is_local else 0
+    theta = cfg.rope_theta
+    if is_local and getattr(cfg, "rope_theta_local", 0):
+        theta = cfg.rope_theta_local
+    cross = memory_kv is not None
+
+    q = _project_q(params, x, cfg)
+    if not cross:
+        q = common.apply_rope(q, positions, theta)
+    q = constrain(q, pcfg, heads_spec(pcfg, cfg.n_heads, batch_dims=2))
+
+    if mode == "decode":
+        if cross:
+            k, v = memory_kv
+            out = decode_attention(q, {"k": k, "v": v},
+                                   jnp.full((x.shape[0],), k.shape[1] - 1,
+                                            jnp.int32),
+                                   softcap=cfg.attn_softcap)
+            new_cache = cache
+        else:
+            k_new, v_new = _project_kv(params, x, cfg)
+            k_new = common.apply_rope(k_new, positions, theta)
+            new_cache = update_cache(cache, k_new, v_new, positions[:, 0],
+                                     mode=pcfg.cache_write)
+            out = decode_attention(q, new_cache, positions[:, 0],
+                                   window=window, softcap=cfg.attn_softcap)
+    else:
+        if cross:
+            k, v = memory_kv
+            out = chunked_attention(q, k, v, causal=False,
+                                    q_chunk=pcfg.q_chunk,
+                                    kv_chunk=pcfg.kv_chunk,
+                                    impl="scan", softcap=cfg.attn_softcap)
+            new_cache = None
+        else:
+            k, v = _project_kv(params, x, cfg)
+            k = common.apply_rope(k, positions, theta)
+            causal = not (cfg.is_encoder_decoder and mode == "encode")
+            out = chunked_attention(
+                q, k, v, causal=causal, window=window,
+                q_chunk=pcfg.q_chunk, kv_chunk=pcfg.kv_chunk,
+                impl=pcfg.attn_impl if causal else "scan",
+                softcap=cfg.attn_softcap)
+            new_cache = None
+            if mode == "prefill":
+                new_cache = _prefill_cache(k, v, positions, window=window,
+                                           max_len=max_len or k.shape[1])
+
+    B, T = x.shape[0], x.shape[1]
+    out = out.reshape(B, T, cfg.q_dim)
+    return out @ params["wo"], new_cache
+
+
+def _prefill_cache(k, v, positions, *, window, max_len):
+    """Build the decode cache from prefill K/V.
+
+    Full-attention layers get a [B, max_len, K, D] cache (prompt K/V in the
+    first S slots); local layers get a ring of ``window`` slots.
+    """
+    S = k.shape[1]
+    if window and window < max_len:
+        # keep the last ``window`` positions, laid out ring-consistently:
+        # true position p lives at slot p % window.
+        last_k = k[:, -window:]
+        last_v = v[:, -window:]
+        last_pos = positions[:, -window:]
+        slot = last_pos % window  # [B, W]
+        def ring_scatter(buf):
+            B = buf.shape[0]
+            out = jnp.zeros((B, window) + buf.shape[2:], buf.dtype)
+            bidx = jnp.arange(B)[:, None]
+            return out.at[bidx, slot].set(buf)
+        cache = {"k": ring_scatter(last_k), "v": ring_scatter(last_v)}
+        B = k.shape[0]
+        kp = jnp.full((B, window), -1, jnp.int32)
+        cache["kpos"] = kp.at[jnp.arange(B)[:, None], slot].set(last_pos)
+        return cache
+    if max_len > S:
+        pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    return {"k": k, "v": v}

@@ -1,0 +1,160 @@
+"""Shared model primitives: RMSNorm, RoPE, activations, param materialization.
+
+Every sub-module exposes ``shapes(cfg) -> nested dict of ShapeDtypeStruct``;
+``materialize(shapes, rng)`` turns that into real arrays (fan-in scaled normal
+init) and is the ONLY place parameters are allocated, so abstract (dry-run)
+and concrete (smoke/train) paths share one source of truth.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.pytree import tree_flatten_with_paths
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Parameter materialization
+# ---------------------------------------------------------------------------
+
+def _init_leaf(path: str, spec: jax.ShapeDtypeStruct, rng: jax.Array) -> jax.Array:
+    """Fan-in-scaled normal init; norms/scales init to 1, biases/gates to 0."""
+    name = path.rsplit("/", 1)[-1]
+    shape, dtype = spec.shape, spec.dtype
+    if name in ("scale",) or name.endswith("_norm"):
+        return jnp.ones(shape, dtype)
+    if name.startswith("b") or name in ("bias",) or name.endswith("_bias"):
+        return jnp.zeros(shape, dtype)
+    if name == "a_param":  # RG-LRU recurrence parameter (see rglru.py)
+        # initialised so that a = exp(-8*sigmoid(a_param)) spans ~(0.9, 0.999)
+        u = jax.random.uniform(rng, shape, jnp.float32, 0.9, 0.999)
+        inner = jnp.clip(-jnp.log(u) / 8.0, 1e-6, 1 - 1e-6)
+        return jnp.log(inner / (1 - inner)).astype(dtype)
+    if len(shape) == 0:
+        return jnp.zeros(shape, dtype)
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+def materialize(shape_tree, rng: jax.Array):
+    """Instantiate a tree of ShapeDtypeStructs into arrays.
+
+    The per-leaf rng folds in a *stable* hash of the leaf path (crc32 —
+    Python's ``hash`` is process-salted and would make init
+    non-reproducible across restarts/hosts)."""
+    import zlib
+
+    flat = tree_flatten_with_paths(shape_tree)
+    leaves = []
+    for path, spec in flat:
+        key = jax.random.fold_in(rng, zlib.crc32(path.encode()) % (2**31))
+        leaves.append(_init_leaf(path, spec, key))
+    treedef = jax.tree.structure(shape_tree)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def abstract(shape_tree):
+    """Identity — shapes ARE the abstract params (ShapeDtypeStructs)."""
+    return shape_tree
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def activation(name: str):
+    if name in ("silu", "swish"):
+        return jax.nn.silu
+    if name in ("gelu", "geglu"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def soft_cap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    exponent = np.arange(0, d_head, 2, dtype=np.float32) / d_head
+    return jnp.asarray(1.0 / (theta**exponent))  # [d_head/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., T, H, D]; positions: broadcastable to [..., T]."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, d/2]
+    angles = angles[..., None, :]  # [..., T, 1, d/2] broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (recurrent blocks)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv. x: [B, T, C]; w: [W, C].
+
+    When ``state`` ([B, W-1, C], trailing context) is given, runs in streaming
+    mode and returns (y, new_state); otherwise zero-pads on the left.
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:-2] + (width - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=-2)  # [B, T+W-1, C]
+    y = sum(
+        xp[..., i : i + x.shape[-2], :] * w[i][None, None, :] for i in range(width)
+    )
+    if state is None:
+        return y.astype(x.dtype)
+    new_state = xp[..., -(width - 1) :, :] if width > 1 else state
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Block-diagonal linear (xLSTM qkv, RG-LRU gates)
+# ---------------------------------------------------------------------------
+
+def block_diag_shapes(n_blocks: int, dim: int, out_per_block: int, dtype) -> Dict:
+    assert dim % n_blocks == 0, (dim, n_blocks)
+    return {"w": sds((n_blocks, dim // n_blocks, out_per_block), dtype)}
+
+
+def block_diag_apply(params, x: jax.Array) -> jax.Array:
+    """x: [..., dim] -> [..., n_blocks * out_per_block]."""
+    nb, ib, ob = params["w"].shape
+    xs = x.reshape(x.shape[:-1] + (nb, ib))
+    y = jnp.einsum("...ni,nio->...no", xs, params["w"])
+    return y.reshape(x.shape[:-1] + (nb * ob,))

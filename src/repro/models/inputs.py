@@ -1,0 +1,59 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns the exact batch pytree each step function
+consumes — weak-type-correct and shardable, with no device allocation. The
+modality frontends are stubs per the assignment: VLM cells carry precomputed
+anyres patch embeddings; audio cells carry precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import sds
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "inputs": sds((b, s), jnp.int32),
+        "labels": sds((b, s), jnp.int32),
+    }
+    if cfg.frontend == "vision_patches":
+        out["patch_embeds"] = sds((b, cfg.frontend_positions, cfg.d_model),
+                                  cfg.compute_dtype)
+        out["patch_pos"] = sds((b, cfg.frontend_positions), jnp.int32)
+    if cfg.is_encoder_decoder:
+        # encoder consumes precomputed frames at the same sequence length
+        out["enc_frames"] = sds((b, s, cfg.d_model), cfg.compute_dtype)
+    return out
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"inputs": sds((b, s), jnp.int32)}
+    if cfg.frontend == "vision_patches":
+        out["patch_embeds"] = sds((b, cfg.frontend_positions, cfg.d_model),
+                                  cfg.compute_dtype)
+        out["patch_pos"] = sds((b, cfg.frontend_positions), jnp.int32)
+    if cfg.is_encoder_decoder:
+        out["enc_frames"] = sds((b, s, cfg.d_model), cfg.compute_dtype)
+    return out
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    return {
+        "token": sds((b, 1), jnp.int32),
+        "pos": sds((b,), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_batch_specs(cfg, shape)
+    if shape.kind == "decode":
+        return decode_batch_specs(cfg, shape)
+    raise ValueError(shape.kind)

@@ -1,0 +1,29 @@
+"""Gated FFN (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation, sds
+from repro.parallel.sharding import ParallelConfig, batch_spec, constrain
+
+from jax.sharding import PartitionSpec as P
+
+
+def shapes(cfg: ModelConfig, width: int | None = None) -> dict:
+    pd = cfg.param_dtype
+    f = width or cfg.d_ff
+    return {
+        "wi": sds((cfg.d_model, f), pd),
+        "wg": sds((cfg.d_model, f), pd),
+        "wo": sds((f, cfg.d_model), pd),
+    }
+
+
+def apply(params: dict, x: jax.Array, *, cfg: ModelConfig,
+          pcfg: ParallelConfig) -> jax.Array:
+    act = activation(cfg.act)
+    h = act(x @ params["wg"]) * (x @ params["wi"])
+    h = constrain(h, pcfg, batch_spec(pcfg, None, "model"))
+    return h @ params["wo"]

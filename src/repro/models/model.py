@@ -1,0 +1,133 @@
+"""Unified model API over all architecture families.
+
+    param_shapes(cfg)               -> ShapeDtypeStruct tree
+    init_params(cfg, rng)           -> concrete params
+    loss_fn(params, batch, ...)     -> (loss, metrics)     [training]
+    prefill(params, batch, ...)     -> (last_logits, cache)
+    decode_step(params, cache, token, pos, ...) -> (logits, cache)
+    init_cache(cfg, batch, seq)     -> zeroed decode cache
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, transformer
+from repro.models.losses import cross_entropy
+from repro.parallel.sharding import ParallelConfig, NO_PARALLEL
+
+
+def param_shapes(cfg: ModelConfig):
+    return transformer.shapes(cfg)
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array):
+    return common.materialize(transformer.shapes(cfg), rng)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq: int, *, cross_len: int = 0):
+    return transformer.cache_shapes(cfg, batch, seq, cross_len=cross_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, *, cross_len: int = 0):
+    return transformer.init_cache(cfg, batch, seq, cross_len=cross_len)
+
+
+def _encode(params, frames, *, cfg, pcfg):
+    x = transformer.project_frames(params, frames, cfg=cfg, pcfg=pcfg)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+    enc = params["encoder"]
+    n_enc_groups = cfg.n_enc_layers // cfg.pattern_len
+    x, _, _ = transformer.stack_apply(
+        enc["blocks"], x, cfg=cfg, pcfg=pcfg, positions=pos, mode="encode",
+        n_groups=n_enc_groups)
+    return common.rms_norm(x, enc["final_norm"]["scale"], cfg.norm_eps)
+
+
+def _backbone(params, batch: dict, *, cfg: ModelConfig,
+              pcfg: ParallelConfig, mode: str):
+    """Embed + frontends + stack. Returns (pre-head hiddens, aux)."""
+    tokens = batch["inputs"]
+    x = transformer.embed(params, tokens, cfg=cfg, pcfg=pcfg)
+    if cfg.frontend == "vision_patches" and "patch_embeds" in batch:
+        x = transformer.splice_patches(params, x, batch["patch_embeds"],
+                                       batch["patch_pos"], cfg=cfg, pcfg=pcfg)
+    memory = None
+    if cfg.is_encoder_decoder:
+        memory = _encode(params, batch["enc_frames"], cfg=cfg, pcfg=pcfg)
+    pos = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None], tokens.shape)
+    x, _, aux = transformer.stack_apply(
+        params["blocks"], x, cfg=cfg, pcfg=pcfg, positions=pos, mode=mode,
+        memory=memory)
+    return x, aux
+
+
+def forward(params, batch: dict, *, cfg: ModelConfig,
+            pcfg: ParallelConfig = NO_PARALLEL, mode: str = "train"):
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    x, aux = _backbone(params, batch, cfg=cfg, pcfg=pcfg, mode=mode)
+    logits = transformer.lm_logits(params, x, cfg=cfg, pcfg=pcfg)
+    return logits, aux
+
+
+def loss_fn(params, batch: dict, *, cfg: ModelConfig,
+            pcfg: ParallelConfig = NO_PARALLEL):
+    if pcfg.fused_head and not cfg.logit_softcap:
+        from repro.models import common
+        from repro.models.losses import fused_cross_entropy
+        x, aux = _backbone(params, batch, cfg=cfg, pcfg=pcfg, mode="train")
+        x = common.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        tied = cfg.tie_embeddings
+        w = params["embed"]["w"] if tied else params["lm_head"]["w"]
+        loss, metrics = fused_cross_entropy(
+            x, w, batch["labels"], real_vocab=cfg.vocab_size,
+            transpose_w=tied, chunk=pcfg.head_chunk,
+            unroll=pcfg.unroll_scans)
+    else:
+        logits, aux = forward(params, batch, cfg=cfg, pcfg=pcfg,
+                              mode="train")
+        loss, metrics = cross_entropy(logits, batch["labels"],
+                                      real_vocab=cfg.vocab_size)
+    metrics["aux_loss"] = aux
+    return loss + aux, metrics
+
+
+def prefill(params, batch: dict, *, cfg: ModelConfig,
+            pcfg: ParallelConfig = NO_PARALLEL, max_len: int = 0):
+    """Run the prompt, build the decode cache (capacity ``max_len``).
+
+    Returns (last_logits, cache)."""
+    tokens = batch["inputs"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = transformer.embed(params, tokens, cfg=cfg, pcfg=pcfg)
+    if cfg.frontend == "vision_patches" and "patch_embeds" in batch:
+        x = transformer.splice_patches(params, x, batch["patch_embeds"],
+                                       batch["patch_pos"], cfg=cfg, pcfg=pcfg)
+    memory = None
+    if cfg.is_encoder_decoder:
+        memory = _encode(params, batch["enc_frames"], cfg=cfg, pcfg=pcfg)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], tokens.shape)
+    x, new_caches, _ = transformer.stack_apply(
+        params["blocks"], x, cfg=cfg, pcfg=pcfg, positions=pos,
+        mode="prefill", memory=memory, max_len=max_len)
+    logits = transformer.lm_logits(params, x[:, -1:, :], cfg=cfg, pcfg=pcfg)
+    return logits[:, 0], new_caches
+
+
+def decode_step(params, cache, token, pos, *, cfg: ModelConfig,
+                pcfg: ParallelConfig = NO_PARALLEL):
+    """One decode step. token: [B,1] int32; pos: [B] int32.
+
+    Returns (logits [B, Vp], new_cache).
+    """
+    x = transformer.embed(params, token, cfg=cfg, pcfg=pcfg)
+    positions = pos[:, None]
+    x, new_caches, _ = transformer.stack_apply(
+        params["blocks"], x, cfg=cfg, pcfg=pcfg, positions=positions,
+        mode="decode", caches=cache)
+    logits = transformer.lm_logits(params, x, cfg=cfg, pcfg=pcfg)
+    return logits[:, 0], new_caches

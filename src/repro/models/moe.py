@@ -1,0 +1,290 @@
+"""Mixture-of-Experts FFN with two dispatch formulations.
+
+The MoE layer is where the paper's technique lives *inside* the model: the
+token->expert dispatch/combine is exactly a Sphere shuffle (data moves to the
+UDF's home node, is processed, and is shuffled back). Expert parallelism maps
+experts onto the ``model`` mesh axis — never across ``pod`` — so the shuffle
+stays on intra-pod ICI, honouring the wide-area design rule.
+
+Two dispatch modes (``ParallelConfig.moe_dispatch``):
+
+  * ``einsum`` — GShard-style dense one-hot dispatch/combine einsums with a
+    capacity factor. Paper-faithful baseline: the shuffle is a literal dense
+    "transport matrix". Costs ~2*E*C*d extra MACs per token.
+  * ``gather`` — index-based dispatch (gather) + scatter-add combine. Same
+    routing and capacity semantics, no one-hot FLOPs (a §Perf iteration).
+
+Both share routing: top-k softmax gates, position-in-expert via cumsum,
+tokens past capacity dropped (gate renormalised over surviving slots).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation, sds
+from repro.parallel.sharding import ParallelConfig, constrain
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+CAPACITY_FACTOR = 1.25
+GROUP_SIZE = 4096  # tokens per dispatch group (GShard-style)
+
+
+def shapes(cfg: ModelConfig) -> dict:
+    pd = cfg.param_dtype
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    return {
+        "router": sds((d, e), jnp.float32),
+        "wi": sds((e, d, f), pd),
+        "wg": sds((e, d, f), pd),
+        "wo": sds((e, f, d), pd),
+    }
+
+
+def capacity(group: int, cfg: ModelConfig) -> int:
+    c = int(group * cfg.top_k / cfg.n_experts * CAPACITY_FACTOR)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def _positions_by_sort(flat: jax.Array) -> jax.Array:
+    """Rank of each slot within its expert's run (first-come order).
+
+    flat: [G, n] expert ids. O(n log n) via stable sort — crucially no
+    [n, E] one-hot tensor: the cumsum formulation materialises
+    G x (k*S) x E int32 (terabytes at production scale) and dominated the
+    baseline MoE collective/memory terms."""
+    G, n = flat.shape
+    order = jnp.argsort(flat, axis=-1, stable=True)      # groups by expert
+    se = jnp.take_along_axis(flat, order, -1)
+    idx = jnp.broadcast_to(jnp.arange(n)[None], (G, n))
+    newrun = jnp.concatenate(
+        [jnp.ones((G, 1), bool), se[:, 1:] != se[:, :-1]], axis=-1)
+    run_start = jax.lax.cummax(jnp.where(newrun, idx, 0), axis=1)
+    rank = idx - run_start                               # pos within run
+    pos = jnp.zeros_like(rank)
+    pos = pos.at[jnp.arange(G)[:, None], order].set(rank)
+    return pos
+
+
+def _route(params, xg, cfg: ModelConfig):
+    """xg: [G, S, d] -> gates [G,S,k], eids [G,S,k], pos-in-expert [G,S,k],
+    aux load-balance loss."""
+    logits = (xg.astype(jnp.float32) @ params["router"])  # [G,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, cfg.top_k)  # [G,S,k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # position-in-expert over slots in priority order (all k=0 slots first)
+    G, S, k = eids.shape
+    E = cfg.n_experts
+    flat = eids.transpose(0, 2, 1).reshape(G, k * S)
+    pos_flat = _positions_by_sort(flat)
+    pos = pos_flat.reshape(G, k, S).transpose(0, 2, 1)  # [G,S,k]
+
+    # aux loss (Switch): E * mean_e(frac_tokens_e * mean_prob_e)
+    top1 = jax.nn.one_hot(eids[..., 0], E, dtype=jnp.float32)
+    frac_tokens = top1.mean(axis=(0, 1))
+    frac_probs = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs) * cfg.router_aux_coef
+    return gates, eids, pos, aux
+
+
+def _ep_spec(pcfg: ParallelConfig) -> P:
+    """[G, E, C, d] layout for expert compute: groups over the non-model
+    batch axes, experts over ``model``. Moving the model-shard of G into E
+    is exactly the Sphere shuffle (an all-to-all on ICI)."""
+    b = tuple(a for a in pcfg.data_axes if a != "model")
+    b_entry = b if len(b) > 1 else (b[0] if b else None)
+    return P(b_entry, "model", None, None)
+
+
+def _expert_ffn(params, xe, cfg: ModelConfig, pcfg: ParallelConfig):
+    """xe: [G, E, C, d] -> [G, E, C, d]; experts sharded over ``model``."""
+    act = activation(cfg.act)
+    h = act(jnp.einsum("gecd,edf->gecf", xe, params["wg"])) * jnp.einsum(
+        "gecd,edf->gecf", xe, params["wi"])
+    h = constrain(h, pcfg, _ep_spec(pcfg))
+    return jnp.einsum("gecf,efd->gecd", h, params["wo"])
+
+
+def apply(params: dict, x: jax.Array, *, cfg: ModelConfig,
+          pcfg: ParallelConfig):
+    """x: [B, T, d] -> (out [B, T, d], aux_loss scalar)."""
+    if pcfg.moe_dispatch == "a2a":
+        if pcfg.mesh is not None and pcfg.layout == "fsdp" \
+                and pcfg.model_size > 1 and cfg.n_experts % pcfg.model_size \
+                == 0:
+            return _apply_a2a(params, x, cfg=cfg, pcfg=pcfg)
+        pcfg = pcfg.with_(moe_dispatch="gather")  # meshless/TP fallback
+    B, T, d = x.shape
+    total = B * T
+    group = min(GROUP_SIZE, total)
+    while total % group:
+        group //= 2
+    G = total // group
+    xg = x.reshape(G, group, d)
+    gates, eids, pos, aux = _route(params, xg, cfg)
+    C = capacity(group, cfg)
+    keep = pos < C  # overflow tokens dropped
+    gates = jnp.where(keep, gates, 0.0)
+    # renormalise over surviving slots
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    if pcfg.moe_dispatch == "einsum":
+        out = _apply_einsum(params, xg, gates, eids, pos, C, cfg, pcfg)
+    elif pcfg.moe_dispatch == "gather":
+        out = _apply_gather(params, xg, gates, eids, pos, keep, C, cfg, pcfg)
+    else:
+        raise ValueError(pcfg.moe_dispatch)
+    return out.reshape(B, T, d).astype(x.dtype), aux
+
+
+def _apply_a2a(params, x, *, cfg: ModelConfig, pcfg: ParallelConfig):
+    """Explicit Sphere-shuffle dispatch: shard_map + lax.all_to_all.
+
+    Each device routes its LOCAL tokens, packs per-(peer, local-expert)
+    fixed-capacity slot buffers, exchanges them with one all_to_all over the
+    ``model`` axis (experts live on model shards; expert weights are
+    FSDP-gathered over the data axes at region entry), computes the expert
+    FFN locally, reverses the all_to_all and combines locally. The only
+    cross-device traffic is 2 x [M, E_loc, cap, d] per layer — the
+    hand-written equivalent of the paper's UDT shuffle, ~50x less traffic
+    than what the SPMD partitioner derives for the gather/einsum
+    formulations at this scale (see EXPERIMENTS.md §Perf).
+
+    Requires tokens sharded over data axes + model (layout="fsdp").
+    Returns (out [B,T,d], aux).
+    """
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    M = pcfg.model_size
+    E_loc = E // M
+    axes = pcfg.data_axes  # includes "model" under fsdp
+    n_total = B * T
+    n_shards = 1
+    for a in axes:
+        n_shards *= pcfg.axis_sizes.get(a, 1)
+    n_loc = n_total // n_shards
+    cap = max(8, -(-int(n_loc * k * CAPACITY_FACTOR / E) // 8) * 8)
+    act = activation(cfg.act)
+
+    def body(router, wg, wi, wo, x_loc):
+        x_loc = x_loc.reshape(n_loc, d)
+        logits = x_loc.astype(jnp.float32) @ router            # [n, E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, eids = jax.lax.top_k(probs, k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+        flat_e = eids.reshape(1, n_loc * k)
+        pos = _positions_by_sort(flat_e)[0]                    # [n*k]
+        flat_e = flat_e[0]
+        keep = pos < cap
+        tok = jnp.repeat(jnp.arange(n_loc), k)
+        dest_m = flat_e // E_loc
+        dest_e = flat_e % E_loc
+        p_clip = jnp.where(keep, pos, cap)                     # OOB drops
+
+        send = jnp.zeros((M, E_loc, cap, d), x_loc.dtype)
+        send = send.at[dest_m, dest_e, p_clip].set(
+            x_loc[tok], mode="drop")
+        recv = lax.all_to_all(send, "model", 0, 0, tiled=True)
+
+        xe = recv.transpose(1, 0, 2, 3).reshape(E_loc, M * cap, d)
+        h = act(jnp.einsum("ecd,edf->ecf", xe, wg)) * \
+            jnp.einsum("ecd,edf->ecf", xe, wi)
+        ye = jnp.einsum("ecf,efd->ecd", h, wo)
+
+        back = ye.reshape(E_loc, M, cap, d).transpose(1, 0, 2, 3)
+        ret = lax.all_to_all(back, "model", 0, 0, tiled=True)
+
+        w = (gates.reshape(n_loc * k) * keep).astype(ret.dtype)
+        contrib = ret[dest_m, dest_e, p_clip] * w[:, None]
+        out = jnp.zeros((n_loc, d), ret.dtype)
+        out = out.at[tok].add(jnp.where(keep[:, None], contrib, 0))
+
+        # aux loss partials (summed over shards outside)
+        top1 = jax.nn.one_hot(eids[..., 0], E, dtype=jnp.float32)
+        aux_part = jnp.stack([top1.sum(0), probs.sum(0)])      # [2, E]
+        return out.reshape(1, n_loc, d), aux_part[None]
+
+    manual = frozenset(a for a in axes if a in pcfg.axis_sizes) | {"model"}
+    b_entry = axes if len(axes) > 1 else axes[0]
+    fn = _shard_map(
+        body, mesh=pcfg.mesh,
+        in_specs=(P(), P("model", None, None), P("model", None, None),
+                  P("model", None, None), P(b_entry, None)),
+        out_specs=(P(b_entry, None, None), P(b_entry, None, None)),
+        check_vma=False, axis_names=manual)
+    xt = x.reshape(n_total, d)
+    out, aux_parts = fn(params["router"], params["wg"], params["wi"],
+                        params["wo"], xt)
+    out = out.reshape(B, T, d).astype(x.dtype)
+    totals = aux_parts.sum(0)                                  # [2, E]
+    frac_tok = totals[0] / jnp.maximum(totals[0].sum(), 1.0)
+    mean_prob = totals[1] / jnp.maximum(n_total, 1)
+    aux = E * jnp.sum(frac_tok * mean_prob) * cfg.router_aux_coef
+    return out, aux
+
+
+def _apply_einsum(params, xg, gates, eids, pos, C, cfg, pcfg):
+    """GShard dense one-hot dispatch/combine (faithful baseline)."""
+    E = cfg.n_experts
+    # combine tensor [G,S,E,C] = gate on (expert, slot) pairs
+    eh = jax.nn.one_hot(eids, E, dtype=xg.dtype)           # [G,S,k,E]
+    ph = jax.nn.one_hot(pos, C, dtype=xg.dtype)            # [G,S,k,C]
+    combine = jnp.einsum("gske,gskc,gsk->gsec", eh, ph,
+                         gates.astype(xg.dtype))           # [G,S,E,C]
+    dispatch = (combine > 0).astype(xg.dtype)
+    xe = jnp.einsum("gsd,gsec->gecd", xg, dispatch)        # the shuffle out
+    xe = constrain(xe, pcfg, _ep_spec(pcfg))
+    ye = _expert_ffn(params, xe, cfg, pcfg)
+    out = jnp.einsum("gecd,gsec->gsd", ye, combine)        # the shuffle back
+    return out
+
+
+def _apply_gather(params, xg, gates, eids, pos, keep, C, cfg, pcfg):
+    """Index-based dispatch: gather tokens into [G,E,C,d], scatter-add back.
+
+    Comm pattern matches the einsum mode (dispatch local on the model axis,
+    combine = local scatter-add + all-reduce over ``model``) but spends no
+    FLOPs on one-hot transport matrices.
+    """
+    G, S, d = xg.shape
+    E, k = cfg.n_experts, cfg.top_k
+    tok = jnp.broadcast_to(jnp.arange(S)[None, :, None], eids.shape)  # [G,S,k]
+
+    flat_e = eids.reshape(G, S * k)
+    flat_p = jnp.where(keep, pos, C).reshape(G, S * k)  # dropped -> OOB slot
+    flat_t = tok.reshape(G, S * k)
+    flat_keep = keep.reshape(G, S * k)
+    gidx = jnp.arange(G)[:, None]
+
+    # dispatch table [G,E,C]: source token index for slot (e,c); OOB writes drop
+    table = jnp.zeros((G, E, C), jnp.int32)
+    table = table.at[gidx, flat_e, flat_p].set(flat_t, mode="drop")
+    filled = jnp.zeros((G, E, C), jnp.bool_)
+    filled = filled.at[gidx, flat_e, flat_p].set(flat_keep, mode="drop")
+    # per-slot combine weight, laid out expert-major [G,E,C]
+    w_table = jnp.zeros((G, E, C), jnp.float32)
+    w_table = w_table.at[gidx, flat_e, flat_p].set(
+        gates.reshape(G, S * k), mode="drop")
+    w_table = jnp.where(filled, w_table, 0.0)
+
+    xe = xg[gidx[..., None], table]                        # gather [G,E,C,d]
+    xe = jnp.where(filled[..., None], xe, 0)
+    xe = constrain(xe, pcfg, _ep_spec(pcfg))
+    ye = _expert_ffn(params, xe, cfg, pcfg)
+
+    # combine: scatter-add weighted expert outputs back onto tokens
+    upd = ye * w_table[..., None].astype(ye.dtype)         # [G,E,C,d]
+    out = jnp.zeros((G, S, d), ye.dtype)
+    out = out.at[gidx[..., None], table].add(
+        jnp.where(filled[..., None], upd, 0), mode="drop")
+    return out

@@ -1,0 +1,125 @@
+"""Griffin/RecurrentGemma recurrent block: conv1d + RG-LRU with gated branch.
+
+RG-LRU (Real-Gated Linear Recurrent Unit):
+
+    r_t = sigmoid(gate_a(x_t))            recurrence gate (block-diag linear)
+    i_t = sigmoid(gate_x(x_t))            input gate
+    log a_t = -c * softplus(a_param) * r_t          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is linear and diagonal, so training parallelises over T with
+``jax.lax.associative_scan`` ((a, b) pair composition); decode is an O(1)
+step with carried state. The full residual block is Griffin's:
+
+    y = W_out( RG-LRU(conv1d(W_x x)) * gelu(W_g x) )
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import block_diag_apply, block_diag_shapes, sds
+
+RGLRU_C = 8.0
+N_GATE_BLOCKS = 8
+
+
+def shapes(cfg: ModelConfig) -> dict:
+    pd = cfg.param_dtype
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "in_x": sds((d, w), pd),
+        "in_g": sds((d, w), pd),
+        "conv_w": sds((cfg.conv1d_width, w), pd),
+        "gate_a": block_diag_shapes(N_GATE_BLOCKS, w, w // N_GATE_BLOCKS, pd),
+        "gate_x": block_diag_shapes(N_GATE_BLOCKS, w, w // N_GATE_BLOCKS, pd),
+        "a_param": sds((w,), jnp.float32),
+        "out": sds((w, d), pd),
+    }
+
+
+def state_shapes(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": sds((batch, w), jnp.float32),
+        "conv": sds((batch, cfg.conv1d_width - 1, w), cfg.compute_dtype),
+    }
+
+
+def _combine(lhs, rhs):
+    a1, b1 = lhs
+    a2, b2 = rhs
+    return a1 * a2, a2 * b1 + b2
+
+
+def _assoc_segment(a, b, h0):
+    """Associative scan over one segment, seeded with h0. Returns (h, h_T)."""
+    a_full = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    b_full = jnp.concatenate([h0[:, None], b], axis=1)
+    _, h = lax.associative_scan(_combine, (a_full, b_full), axis=1)
+    return h[:, 1:], h[:, -1]
+
+
+def _lru(p, x, h0, *, chunk: int = 0, unroll: bool = False):
+    """x: [B,T,W] (post-conv); h0: [B,W] fp32. Returns (y [B,T,W], h_T).
+
+    ``chunk > 0`` bounds the associative scan's O(T log T) fp32 intermediate
+    tree to O(chunk log chunk) by scanning chunk-to-chunk with a carried
+    state (a §Perf memory-term iteration); the math is exact either way.
+    """
+    B, T, W = x.shape
+    r = jax.nn.sigmoid(block_diag_apply(p["gate_a"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(block_diag_apply(p["gate_x"], x).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["a_param"]) * r   # [B,T,W]
+    a = jnp.exp(log_a)
+    gated = i * x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    if not chunk or T <= chunk:
+        h, h_t = _assoc_segment(a, b, h0)
+        return h.astype(x.dtype), h_t
+
+    L = chunk
+    while T % L:
+        L //= 2
+    nc = T // L
+    ar = a.reshape(B, nc, L, W).transpose(1, 0, 2, 3)
+    br = b.reshape(B, nc, L, W).transpose(1, 0, 2, 3)
+
+    if unroll:
+        hs, h_c = [], h0
+        for ci in range(nc):
+            h, h_c = _assoc_segment(ar[ci], br[ci], h_c)
+            hs.append(h)
+        h = jnp.stack(hs, 0)
+    else:
+        def body(h_c, ab):
+            h, h_c = _assoc_segment(ab[0], ab[1], h_c)
+            return h_c, h
+
+        h_c, h = lax.scan(body, h0, (ar, br))
+    h = h.transpose(1, 0, 2, 3).reshape(B, T, W)
+    return h.astype(x.dtype), h_c
+
+
+def apply(p, x, *, cfg: ModelConfig, state=None, chunk: int = 0,
+          unroll: bool = False):
+    """Full Griffin recurrent block. x: [B,T,d] -> (out, new_state | None)."""
+    B, T, d = x.shape
+    w = cfg.lru_width or d
+    branch = x @ p["in_x"]
+    gate = jax.nn.gelu((x @ p["in_g"]).astype(jnp.float32),
+                       approximate=True).astype(x.dtype)
+    if state is None:
+        xc = common.causal_conv1d(branch, p["conv_w"])
+        h0 = jnp.zeros((B, w), jnp.float32)
+        y, _ = _lru(p, xc, h0, chunk=chunk, unroll=unroll)
+        return (y * gate) @ p["out"], None
+    xc, new_conv = common.causal_conv1d(branch, p["conv_w"], state["conv"])
+    y, h_t = _lru(p, xc, state["h"], chunk=chunk, unroll=unroll)
+    out = (y * gate) @ p["out"]
+    return out, {"h": h_t, "conv": new_conv}

@@ -1,0 +1,395 @@
+"""The layer stack: scan-over-groups transformer covering all six families.
+
+The stack is ``n_groups`` repetitions of the config's ``block_pattern`` unit.
+Parameters (and decode caches / recurrent states) for the unit are stacked
+with a leading group dim and the stack lowers as one ``lax.scan`` — for 512
+device compiles this keeps the HLO proportional to the *pattern unit*, not
+the layer count, and lets the remat policy apply uniformly.
+
+Cache pytree mirrors the param pytree: ``{"layer<i>": {...}}`` per unit
+position, leaves stacked over groups. Attention layers hold KV (full or
+ring) caches; recurrent layers hold their O(1) state — which is precisely
+why the hybrid/ssm archs run ``long_500k``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, mlp, moe, rglru, xlstm
+from repro.models.common import rms_norm, sds, soft_cap
+from repro.parallel.sharding import ParallelConfig, batch_spec, constrain
+
+
+# ---------------------------------------------------------------------------
+# Parameter shapes
+# ---------------------------------------------------------------------------
+
+def _unit_shapes(cfg: ModelConfig, *, decoder_cross: bool) -> dict:
+    pd = cfg.param_dtype
+    d = cfg.d_model
+    unit = {}
+    for i, sym in enumerate(cfg.block_pattern):
+        if sym in ("A", "L"):
+            layer = {
+                "norm1": {"scale": sds((d,), pd)},
+                "attn": attention.shapes(cfg),
+                "norm2": {"scale": sds((d,), pd)},
+            }
+            if decoder_cross:
+                layer["norm_x"] = {"scale": sds((d,), pd)}
+                layer["xattn"] = attention.shapes(cfg, cross=True)
+            if cfg.family == "moe":
+                layer["moe"] = moe.shapes(cfg)
+            else:
+                layer["mlp"] = mlp.shapes(cfg)
+        elif sym == "R":
+            layer = {
+                "norm1": {"scale": sds((d,), pd)},
+                "rglru": rglru.shapes(cfg),
+                "norm2": {"scale": sds((d,), pd)},
+                "mlp": mlp.shapes(cfg),
+            }
+        elif sym == "m":
+            layer = {"norm1": {"scale": sds((d,), pd)},
+                     "mlstm": xlstm.mlstm_shapes(cfg)}
+        elif sym == "s":
+            layer = {"norm1": {"scale": sds((d,), pd)},
+                     "slstm": xlstm.slstm_shapes(cfg)}
+        else:
+            raise ValueError(sym)
+        unit[f"layer{i}"] = layer
+    return unit
+
+
+def _stack_groups(unit_tree, n_groups: int):
+    return jax.tree.map(
+        lambda s: sds((n_groups,) + s.shape, s.dtype), unit_tree)
+
+
+def shapes(cfg: ModelConfig) -> dict:
+    """Full parameter tree (as ShapeDtypeStructs)."""
+    pd = cfg.param_dtype
+    d, vp = cfg.d_model, cfg.padded_vocab
+    out = {
+        "embed": {"w": sds((vp, d), pd)},
+        "blocks": _stack_groups(
+            _unit_shapes(cfg, decoder_cross=cfg.is_encoder_decoder),
+            cfg.n_groups),
+        "final_norm": {"scale": sds((d,), pd)},
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = {"w": sds((d, vp), pd)}
+    if cfg.is_encoder_decoder:
+        enc_cfg = cfg  # same dims per assignment
+        out["encoder"] = {
+            "blocks": _stack_groups(_unit_shapes(cfg, decoder_cross=False),
+                                    cfg.n_enc_layers // cfg.pattern_len),
+            "final_norm": {"scale": sds((d,), pd)},
+        }
+    if cfg.frontend == "vision_patches":
+        out["frontend"] = {"w1": sds((d, d), pd), "w2": sds((d, d), pd)}
+    elif cfg.frontend == "audio_frames":
+        out["frontend"] = {"w1": sds((d, d), pd)}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode cache / recurrent state shapes
+# ---------------------------------------------------------------------------
+
+def _unit_cache_shapes(cfg: ModelConfig, batch: int, seq: int,
+                       *, cross_len: int = 0) -> dict:
+    unit = {}
+    for i, sym in enumerate(cfg.block_pattern):
+        if sym in ("A", "L"):
+            ring = sym == "L" and cfg.local_window and cfg.local_window < seq
+            layer = {"attn": attention.cache_shapes(
+                cfg, batch, seq, ring=ring, window=cfg.local_window)}
+            if cfg.is_encoder_decoder and cross_len:
+                ct = cfg.compute_dtype
+                layer["xk"] = sds((batch, cross_len, cfg.n_kv_heads,
+                                   cfg.d_head), ct)
+                layer["xv"] = sds((batch, cross_len, cfg.n_kv_heads,
+                                   cfg.d_head), ct)
+        elif sym == "R":
+            layer = {"rec": rglru.state_shapes(cfg, batch)}
+        elif sym == "m":
+            layer = {"rec": xlstm.mlstm_state_shapes(cfg, batch)}
+        elif sym == "s":
+            layer = {"rec": xlstm.slstm_state_shapes(cfg, batch)}
+        unit[f"layer{i}"] = layer
+    return unit
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq: int,
+                 *, cross_len: int = 0) -> dict:
+    return _stack_groups(
+        _unit_cache_shapes(cfg, batch, seq, cross_len=cross_len),
+        cfg.n_groups)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, *, cross_len: int = 0):
+    tree = cache_shapes(cfg, batch, seq, cross_len=cross_len)
+    return _zero_state(tree)
+
+
+# ---------------------------------------------------------------------------
+# Unit application
+# ---------------------------------------------------------------------------
+
+def _zero_state(shape_tree):
+    from repro.utils.pytree import tree_map_with_path
+
+    def init(path, s):
+        if s.dtype == jnp.int32:
+            return jnp.full(s.shape, -1, s.dtype)
+        if path.split("/")[-1] == "m":  # log-space stabilisers: -inf-ish
+            return jnp.full(s.shape, -1e30, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return tree_map_with_path(init, shape_tree)
+
+
+def _unit_apply(unit_params, x, *, cfg: ModelConfig, pcfg: ParallelConfig,
+                positions, mode: str, unit_cache=None, memory=None,
+                max_len: int = 0):
+    """Apply one pattern unit. Returns (x, new_cache, aux_loss)."""
+    eps = cfg.norm_eps
+    B = x.shape[0]
+    aux = jnp.zeros((), jnp.float32)
+    collect = mode == "prefill" or unit_cache is not None
+    new_cache = {} if collect else None
+
+    def rec_state(i, sym):
+        if unit_cache is not None:
+            return unit_cache[f"layer{i}"]["rec"]
+        if mode != "prefill":
+            return None
+        maker = {"R": rglru.state_shapes, "m": xlstm.mlstm_state_shapes,
+                 "s": xlstm.slstm_state_shapes}[sym]
+        return _zero_state(maker(cfg, B))
+
+    for i, sym in enumerate(cfg.block_pattern):
+        lp = unit_params[f"layer{i}"]
+        lc = unit_cache[f"layer{i}"] if unit_cache is not None else None
+        if sym in ("A", "L"):
+            h = rms_norm(x, lp["norm1"]["scale"], eps)
+            out, attn_cache = attention.apply(
+                lp["attn"], h, cfg=cfg, pcfg=pcfg, layer_sym=sym,
+                positions=positions, mode=mode, max_len=max_len,
+                cache=lc["attn"] if lc is not None else None)
+            x = x + out
+            if cfg.is_encoder_decoder and mode != "encode" and (
+                    memory is not None or (lc is not None and "xk" in lc)):
+                hx = rms_norm(x, lp["norm_x"]["scale"], eps)
+                if memory is not None:  # train / prefill: project fresh
+                    mem_kv = attention._project_kv(lp["xattn"], memory, cfg)
+                else:                   # decode: cached cross K/V
+                    mem_kv = (lc["xk"], lc["xv"])
+                xout, _ = attention.apply(
+                    lp["xattn"], hx, cfg=cfg, pcfg=pcfg, layer_sym="A",
+                    positions=positions, mode=mode, memory_kv=mem_kv)
+                x = x + xout
+            h = rms_norm(x, lp["norm2"]["scale"], eps)
+            if cfg.family == "moe":
+                ffn, aux_i = moe.apply(lp["moe"], h, cfg=cfg, pcfg=pcfg)
+                aux = aux + aux_i
+            else:
+                ffn = mlp.apply(lp["mlp"], h, cfg=cfg, pcfg=pcfg)
+            x = x + ffn
+            if new_cache is not None:
+                layer_new = {"attn": attn_cache if attn_cache is not None
+                             else lc["attn"]}
+                if cfg.is_encoder_decoder:
+                    if memory is not None:  # prefill: store projected cross KV
+                        layer_new["xk"], layer_new["xv"] = mem_kv
+                    elif lc is not None and "xk" in lc:
+                        layer_new["xk"], layer_new["xv"] = lc["xk"], lc["xv"]
+                new_cache[f"layer{i}"] = layer_new
+        elif sym == "R":
+            h = rms_norm(x, lp["norm1"]["scale"], eps)
+            out, st = rglru.apply(lp["rglru"], h, cfg=cfg,
+                                  state=rec_state(i, sym),
+                                  chunk=pcfg.lru_chunk,
+                                  unroll=pcfg.unroll_scans)
+            x = x + out
+            h = rms_norm(x, lp["norm2"]["scale"], eps)
+            x = x + mlp.apply(lp["mlp"], h, cfg=cfg, pcfg=pcfg)
+            if new_cache is not None:
+                new_cache[f"layer{i}"] = {"rec": st}
+        elif sym == "m":
+            h = rms_norm(x, lp["norm1"]["scale"], eps)
+            out, st = xlstm.mlstm_apply(lp["mlstm"], h, cfg=cfg,
+                                        state=rec_state(i, sym),
+                                        unroll=pcfg.unroll_scans)
+            x = x + out
+            if new_cache is not None:
+                new_cache[f"layer{i}"] = {"rec": st}
+        elif sym == "s":
+            h = rms_norm(x, lp["norm1"]["scale"], eps)
+            out, st = xlstm.slstm_apply(lp["slstm"], h, cfg=cfg,
+                                        state=rec_state(i, sym))
+            x = x + out
+            if new_cache is not None:
+                new_cache[f"layer{i}"] = {"rec": st}
+        x = constrain(x, pcfg, batch_spec(pcfg, None, None))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack application (scan over groups)
+# ---------------------------------------------------------------------------
+
+def _remat_wrap(fn, pcfg: ParallelConfig, mode: str):
+    # jax.checkpoint only affects differentiated code, so wrapping every mode
+    # is safe; it matters for "train" (and "encode" under the train loss).
+    if pcfg.remat == "none":
+        return fn
+    if pcfg.remat == "full":
+        policy = jax.checkpoint_policies.nothing_saveable
+    elif pcfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        raise ValueError(pcfg.remat)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def stack_apply(blocks_params, x, *, cfg: ModelConfig, pcfg: ParallelConfig,
+                positions, mode: str, caches=None, memory=None,
+                n_groups: Optional[int] = None, max_len: int = 0):
+    """Run the full stack. Returns (x, new_caches, aux).
+
+    ``caches`` is required for decode, ignored for train/encode, and unused
+    for prefill (prefill builds fresh caches of capacity ``max_len``).
+    """
+    n_groups = n_groups or cfg.n_groups
+    emit_cache = mode == "prefill" or caches is not None
+
+    def body(carry, xs):
+        h, aux = carry
+        if caches is None:
+            unit_params, unit_cache = xs, None
+        else:
+            unit_params, unit_cache = xs
+        h, new_cache, aux_i = _unit_apply(unit_params, h, cfg=cfg, pcfg=pcfg,
+                                          positions=positions, mode=mode,
+                                          unit_cache=unit_cache, memory=memory,
+                                          max_len=max_len)
+        return (h, aux + aux_i), new_cache
+
+    body = _remat_wrap(body, pcfg, mode)
+    xs = blocks_params if caches is None else (blocks_params, caches)
+    if pcfg.scan_layers:
+        (x, aux), new_caches = lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), xs)
+    else:
+        carry = (x, jnp.zeros((), jnp.float32))
+        outs = []
+        for g in range(n_groups):
+            unit = jax.tree.map(lambda a: a[g], xs)
+            carry, nc = body(carry, unit)
+            outs.append(nc)
+        x, aux = carry
+        new_caches = None
+        if emit_cache:
+            new_caches = jax.tree.map(lambda *ys: jnp.stack(ys), *outs)
+    return x, (new_caches if emit_cache else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / frontends
+# ---------------------------------------------------------------------------
+
+def _vocab_parallel_embed(params, tokens, *, cfg: ModelConfig,
+                          pcfg: ParallelConfig):
+    """Megatron-style vocab-parallel lookup: each model shard gathers its
+    vocab slice with a masked local take, then one psum over ``model``
+    combines. Avoids XLA's 'involuntary full rematerialization' of the
+    [B,T,D] gather when the table is vocab-sharded (a §Perf memory/
+    collective iteration)."""
+    try:
+        from jax import shard_map as _shard_map
+    except ImportError:  # pragma: no cover
+        from jax.experimental.shard_map import shard_map as _shard_map
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+
+    w = params["embed"]["w"]
+    vp = w.shape[0]
+    msz = pcfg.model_size
+    vshard = vp // msz
+
+    def body(w_local, toks):
+        idx = lax.axis_index("model")
+        rel = toks - idx * vshard
+        ok = (rel >= 0) & (rel < vshard)
+        out = jnp.take(w_local, jnp.clip(rel, 0, vshard - 1), axis=0)
+        out = jnp.where(ok[..., None], out, 0).astype(cfg.compute_dtype)
+        return lax.psum(out, "model")
+
+    fn = _shard_map(body, mesh=pcfg.mesh,
+                    in_specs=(P("model", None), P()),
+                    out_specs=P(), check_vma=False,
+                    axis_names=frozenset({"model"}))
+    return fn(w, tokens)
+
+
+def embed(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig):
+    if pcfg.embed_mode == "vocab_parallel" and pcfg.mesh is not None \
+            and pcfg.model_size > 1:
+        x = _vocab_parallel_embed(params, tokens, cfg=cfg, pcfg=pcfg)
+    else:
+        w = params["embed"]["w"]
+        x = jnp.take(w, tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+    return constrain(x, pcfg, batch_spec(pcfg, None, None))
+
+
+def splice_patches(params, x, patch_embeds, patch_pos, *, cfg, pcfg):
+    """Splice projected vision-patch embeddings into the token stream.
+
+    Formulated as a small int32 scatter ([B,S] inverse-index map) followed
+    by a gather + select: scattering the [B,S,D] hidden tensor directly
+    makes the SPMD partitioner replicate it across the mesh (same pathology
+    as masked KV writes); this form keeps everything batch-local."""
+    fp = params["frontend"]
+    proj = jax.nn.gelu(patch_embeds.astype(cfg.compute_dtype) @ fp["w1"],
+                       approximate=True) @ fp["w2"]
+    if cfg.embed_scale:
+        proj = proj * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+    B, S, _ = x.shape
+    P_ = patch_pos.shape[1]
+    b_idx = jnp.arange(B)[:, None]
+    inv = jnp.full((B, S), -1, jnp.int32)
+    inv = inv.at[b_idx, patch_pos].set(
+        jnp.broadcast_to(jnp.arange(P_, dtype=jnp.int32)[None], (B, P_)))
+    picked = jnp.take_along_axis(
+        proj.astype(x.dtype),
+        jnp.clip(inv, 0, P_ - 1)[..., None].astype(jnp.int32), axis=1)
+    return jnp.where((inv >= 0)[..., None], picked, x)
+
+
+def project_frames(params, frames, *, cfg, pcfg):
+    """Audio frontend stub: one linear projection over frame embeddings."""
+    return constrain(
+        frames.astype(cfg.compute_dtype) @ params["frontend"]["w1"],
+        pcfg, batch_spec(pcfg, None, None))
+
+
+def lm_logits(params, x, *, cfg: ModelConfig, pcfg: ParallelConfig):
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"]["w"]
+        logits = jnp.einsum("btd,vd->btv", x, w)
+    else:
+        logits = x @ params["lm_head"]["w"]
+    logits = soft_cap(logits, cfg.logit_softcap)
+    return constrain(logits, pcfg, batch_spec(pcfg, None, "model"))

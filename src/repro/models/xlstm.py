@@ -1,0 +1,318 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+mLSTM (matrix-memory LSTM) is a gated linear-attention RNN:
+
+    C_t = exp(logsig f_t) C_{t-1} + exp(i_t) k_t v_t^T
+    n_t = exp(logsig f_t) n_{t-1} + exp(i_t) k_t
+    h_t = (q_t C_t) / max(|q_t n_t|, exp(-m_t))
+
+with a log-space stabiliser m_t. Training uses the **chunkwise-parallel**
+form (intra-chunk attention matrix + inter-chunk state scan) — TPU-friendly:
+the MXU sees [L, L] and [L, d] matmuls instead of a length-T sequential
+dependency. Decode uses the O(1) recurrent step. Both are validated against
+each other in tests (the sequential form is the oracle).
+
+sLSTM has a true nonlinear recurrence (h feeds back through the gates) so it
+cannot be parallelised over time; it runs as a lax.scan with block-diagonal
+recurrent weights (one block per head), exactly as published.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import block_diag_apply, block_diag_shapes, sds
+
+CHUNK = 256  # mLSTM chunk length for the chunkwise-parallel form
+
+
+def _inner(cfg: ModelConfig) -> int:
+    return int(cfg.d_model * cfg.mlstm_proj_factor)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_shapes(cfg: ModelConfig) -> dict:
+    pd = cfg.param_dtype
+    d, inner = cfg.d_model, _inner(cfg)
+    bs = cfg.mlstm_qkv_blocksize
+    h = cfg.n_heads
+    return {
+        "up": sds((d, 2 * inner), pd),
+        "conv_w": sds((cfg.conv1d_width, inner), pd),
+        "q": block_diag_shapes(inner // bs, inner, bs, pd),
+        "k": block_diag_shapes(inner // bs, inner, bs, pd),
+        "v": block_diag_shapes(inner // bs, inner, bs, pd),
+        "igate": {"w": sds((3 * inner, h), jnp.float32),
+                  "b": sds((h,), jnp.float32)},
+        "fgate": {"w": sds((3 * inner, h), jnp.float32),
+                  "b": sds((h,), jnp.float32)},
+        "out_norm": sds((inner,), pd),
+        "down": sds((inner, d), pd),
+    }
+
+
+def mlstm_state_shapes(cfg: ModelConfig, batch: int) -> dict:
+    inner = _inner(cfg)
+    h = cfg.n_heads
+    dh = inner // h
+    return {
+        "C": sds((batch, h, dh, dh), jnp.float32),
+        "n": sds((batch, h, dh), jnp.float32),
+        "m": sds((batch, h), jnp.float32),
+        "conv": sds((batch, cfg.conv1d_width - 1, inner), cfg.compute_dtype),
+    }
+
+
+def _mlstm_qkv_gates(p, x, cfg: ModelConfig, conv_state=None):
+    """x: [B,T,d] -> q,k,v [B,T,H,dh], i/f raw gates [B,T,H], z [B,T,inner]."""
+    inner = _inner(cfg)
+    h = cfg.n_heads
+    up = x @ p["up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    if conv_state is None:
+        xc = common.causal_conv1d(xm, p["conv_w"])
+        new_conv = None
+    else:
+        xc, new_conv = common.causal_conv1d(xm, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    q = block_diag_apply(p["q"], xc)
+    k = block_diag_apply(p["k"], xc) / math.sqrt(inner // h)
+    v = block_diag_apply(p["v"], xm)
+    qkv = jnp.concatenate([q, k, v], axis=-1).astype(jnp.float32)
+    ig = qkv @ p["igate"]["w"] + p["igate"]["b"]  # [B,T,H]
+    fg = qkv @ p["fgate"]["w"] + p["fgate"]["b"]
+    dh = inner // h
+    shp = x.shape[:-1] + (h, dh)
+    return q.reshape(shp), k.reshape(shp), v.reshape(shp), ig, fg, z, new_conv
+
+
+def _mlstm_chunk(carry, qkvif):
+    """One chunk of the chunkwise-parallel mLSTM. Shapes: q,k,v [B,L,H,dh];
+    ig,fg [B,L,H]. Carry: C [B,H,dk,dv], n [B,H,dk], m [B,H]."""
+    C, n, m = carry
+    q, k, v, ig, fg = qkvif
+    B, L, H, dh = q.shape
+    logf = jax.nn.log_sigmoid(fg.astype(jnp.float32))     # [B,L,H]
+    b = jnp.cumsum(logf, axis=1)                           # inclusive cumsum
+    i32 = ig.astype(jnp.float32)
+    g = lax.cummax(i32 - b, axis=1)                        # running max of i-b
+    m_t = b + jnp.maximum(m[:, None], g)                   # [B,L,H]
+    b_last, m_last = b[:, -1], m_t[:, -1]
+
+    qf = q.astype(jnp.float32).transpose(0, 2, 1, 3)       # [B,H,L,dh]
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+
+    # intra-chunk: D[t,s] = exp(b_t - b_s + i_s - m_t) for s <= t
+    bt = b.transpose(0, 2, 1)                              # [B,H,L]
+    mt = m_t.transpose(0, 2, 1)
+    it = i32.transpose(0, 2, 1)
+    logD = bt[..., :, None] - bt[..., None, :] + it[..., None, :] \
+        - mt[..., :, None]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(tri, jnp.exp(logD), 0.0)                 # [B,H,L,L]
+    scores = jnp.einsum("bhtd,bhsd->bhts", qf, kf) * D
+    h_intra = jnp.einsum("bhts,bhsd->bhtd", scores, vf)
+    den_intra = scores.sum(-1)                             # [B,H,L]
+
+    # inter-chunk: contribution of carried state
+    decay_in = jnp.exp(m[:, None] + b - m_t).transpose(0, 2, 1)  # [B,H,L]
+    h_inter = jnp.einsum("bhtd,bhde->bhte", qf, C) * decay_in[..., None]
+    den_inter = jnp.einsum("bhtd,bhd->bht", qf, n) * decay_in
+
+    den = den_intra + den_inter
+    h = (h_intra + h_inter) / jnp.maximum(
+        jnp.abs(den), jnp.exp(-mt))[..., None]
+
+    # chunk-end state
+    m_new = m_t[:, -1]                                     # [B,H]
+    decay_state = jnp.exp(m + b_last - m_new)              # [B,H]
+    w_s = jnp.exp(b_last[:, None] - b + i32 - m_new[:, None]) \
+        .transpose(0, 2, 1)                                # [B,H,L]
+    C_new = C * decay_state[..., None, None] + jnp.einsum(
+        "bhtd,bhte->bhde", kf * w_s[..., None], vf)
+    n_new = n * decay_state[..., None] + (kf * w_s[..., None]).sum(2)
+    return (C_new, n_new, m_new), h.transpose(0, 2, 1, 3)  # [B,L,H,dh]
+
+
+def mlstm_apply(p, x, *, cfg: ModelConfig, state=None, unroll: bool = False):
+    """Full block. x: [B,T,d]. Returns (out [B,T,d], new_state | None)."""
+    B, T, d = x.shape
+    inner = _inner(cfg)
+    H = cfg.n_heads
+    dh = inner // H
+
+    if state is not None and T == 1:
+        return _mlstm_decode(p, x, cfg, state)
+
+    conv_state = state["conv"] if state is not None else None
+    q, k, v, ig, fg, z, new_conv = _mlstm_qkv_gates(p, x, cfg, conv_state)
+
+    L = CHUNK
+    while T % L:
+        L //= 2
+    nc = T // L
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    if state is not None:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def chunked(a):
+        return a.reshape(B, nc, L, *a.shape[2:]).transpose(
+            1, 0, 2, *range(3, a.ndim + 1))
+
+    xs = tuple(chunked(a) for a in (q, k, v, ig, fg))
+    if unroll:  # measurement mode: cost_analysis sees every chunk
+        carry = (C0, n0, m0)
+        hs = []
+        for ci in range(nc):
+            carry, h_c = _mlstm_chunk(carry, tuple(a[ci] for a in xs))
+            hs.append(h_c)
+        C, n, m = carry
+        hs = jnp.stack(hs, 0)
+    else:
+        (C, n, m), hs = lax.scan(_mlstm_chunk, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, T, inner)
+
+    h = common.rms_norm(h.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ p["down"]
+    new_state = None
+    if state is not None:
+        new_state = {"C": C, "n": n, "m": m, "conv": new_conv}
+    return out, new_state
+
+
+def _mlstm_decode(p, x, cfg: ModelConfig, state):
+    """O(1) recurrent step. x: [B,1,d]."""
+    B = x.shape[0]
+    inner = _inner(cfg)
+    H = cfg.n_heads
+    dh = inner // H
+    q, k, v, ig, fg, z, new_conv = _mlstm_qkv_gates(p, x, cfg, state["conv"])
+    q, k, v = (a[:, 0].astype(jnp.float32) for a in (q, k, v))  # [B,H,dh]
+    ig, fg = ig[:, 0].astype(jnp.float32), fg[:, 0].astype(jnp.float32)
+    C, n, m = state["C"], state["n"], state["m"]
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + m, ig)
+    fprime = jnp.exp(logf + m - m_new)[..., None]
+    iprime = jnp.exp(ig - m_new)[..., None]
+    C_new = C * fprime[..., None] + iprime[..., None] * (
+        k[..., :, None] * v[..., None, :])
+    n_new = n * fprime + iprime * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    den = jnp.einsum("bhd,bhd->bh", q, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(B, 1, inner)
+    h = common.rms_norm(h.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ p["down"]
+    return out, {"C": C_new, "n": n_new, "m": m_new, "conv": new_conv}
+
+
+def mlstm_sequential_oracle(p, x, *, cfg: ModelConfig):
+    """Step-by-step reference (test oracle for the chunkwise form)."""
+    B, T, d = x.shape
+    state = {k: jnp.zeros(s.shape, s.dtype) if k != "m" else
+             jnp.full(s.shape, -1e30, s.dtype)
+             for k, s in mlstm_state_shapes(cfg, B).items()}
+    outs = []
+    for t in range(T):
+        o, state = _mlstm_decode(p, x[:, t:t + 1], cfg, state)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_ffn_width(cfg: ModelConfig) -> int:
+    return common.round_up(int(cfg.d_model * cfg.slstm_proj_factor), 128)
+
+
+def slstm_shapes(cfg: ModelConfig) -> dict:
+    pd = cfg.param_dtype
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    out = {}
+    for g in "ifzo":
+        out[f"w_{g}"] = sds((d, d), pd)
+        out[f"r_{g}"] = sds((h, hd, hd), pd)  # block-diagonal recurrence
+        out[f"b_{g}"] = sds((d,), jnp.float32)
+    f = slstm_ffn_width(cfg)
+    out["ffn"] = {"wi": sds((d, f), pd), "wg": sds((d, f), pd),
+                  "wo": sds((f, d), pd)}
+    out["out_norm"] = sds((d,), pd)
+    return out
+
+
+def slstm_state_shapes(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": sds((batch, d), jnp.float32),
+        "n": sds((batch, d), jnp.float32),
+        "m": sds((batch, d), jnp.float32),
+        "h": sds((batch, d), jnp.float32),
+    }
+
+
+def _slstm_step(p, cfg, carry, x_t):
+    """x_t: [B,d] fp32 pre-activations W x (4 gates stacked)."""
+    c, n, m, h = carry
+    H = cfg.n_heads
+    d = cfg.d_model
+    hd = d // H
+
+    def rec(name, hh):
+        hb = hh.reshape(hh.shape[0], H, hd)
+        return jnp.einsum("bhi,hio->bho", hb, p[f"r_{name}"].astype(jnp.float32)
+                          ).reshape(hh.shape[0], d)
+
+    xi, xf, xz, xo = jnp.split(x_t, 4, axis=-1)
+    itilde = xi + rec("i", h) + p["b_i"]
+    ftilde = xf + rec("f", h) + p["b_f"]
+    z = jnp.tanh(xz + rec("z", h) + p["b_z"])
+    o = jax.nn.sigmoid(xo + rec("o", h) + p["b_o"])
+    logf = jax.nn.log_sigmoid(ftilde)
+    m_new = jnp.maximum(logf + m, itilde)
+    iprime = jnp.exp(itilde - m_new)
+    fprime = jnp.exp(logf + m - m_new)
+    c_new = fprime * c + iprime * z
+    n_new = fprime * n + iprime
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_apply(p, x, *, cfg: ModelConfig, state=None):
+    """x: [B,T,d] -> (out, new_state | None). Sequential scan over T."""
+    B, T, d = x.shape
+    xf = x.astype(jnp.float32)
+    pre = jnp.concatenate(
+        [xf @ p[f"w_{g}"].astype(jnp.float32) for g in "ifzo"], axis=-1)
+    if state is None:
+        carry = (jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32),
+                 jnp.full((B, d), -1e30, jnp.float32),
+                 jnp.zeros((B, d), jnp.float32))
+    else:
+        carry = (state["c"], state["n"], state["m"], state["h"])
+    carry, hs = lax.scan(lambda cr, xt: _slstm_step(p, cfg, cr, xt),
+                         carry, pre.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)  # [B,T,d]
+    h = common.rms_norm(h, p["out_norm"], cfg.norm_eps)
+    ffn = p["ffn"]
+    out = (jax.nn.gelu(h @ ffn["wg"], approximate=True) * (h @ ffn["wi"])) \
+        @ ffn["wo"]
+    new_state = None
+    if state is not None:
+        c, n, m, hh = carry
+        new_state = {"c": c, "n": n, "m": m, "h": hh}
+    return out, new_state

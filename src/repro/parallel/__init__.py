@@ -1,0 +1,7 @@
+from repro.parallel.sharding import (  # noqa: F401
+    ParallelConfig,
+    batch_spec,
+    constrain,
+    param_specs_for,
+    kv_cache_spec,
+)

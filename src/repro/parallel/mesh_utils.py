@@ -1,0 +1,23 @@
+"""Mesh helpers shared by launchers and tests."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def single_device_mesh(axes=("data", "model")) -> Mesh:
+    """A trivial mesh over however many devices exist (tests / CPU)."""
+    n = jax.device_count()
+    shape = (n,) + (1,) * (len(axes) - 1)
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def validate_mesh(mesh: Mesh, expect_devices: int | None = None) -> None:
+    n = int(np.prod(mesh.devices.shape))
+    if expect_devices is not None and n != expect_devices:
+        raise ValueError(f"mesh has {n} devices, expected {expect_devices}")

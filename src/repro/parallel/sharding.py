@@ -1,0 +1,269 @@
+"""Sharding policy: logical rules mapping parameter paths -> PartitionSpec.
+
+The production mesh is ``("data", "model")`` within a pod and
+``("pod", "data", "model")`` across pods. Policy (paper-faithful wide-area
+design — see DESIGN.md §4):
+
+  * parameters / optimizer state: FSDP over ``data`` x TP/EP over ``model``,
+    **replicated over ``pod``** — the cross-pod ("wide-area") hop carries only
+    the once-per-step gradient reduction, never bulk weights;
+  * activations: batch over ``(pod, data)``, heads/ffn over ``model``;
+  * KV caches: batch over ``(pod, data)``; heads over ``model`` when the head
+    count divides, else the sequence dim (flash-decoding style), else
+    replicated.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """Distribution + optimization knobs (the hillclimb surface)."""
+
+    mesh: Optional[Mesh] = None
+    multi_pod: bool = False
+    # --- optimization knobs (baseline values are paper-faithful) -----------
+    mode: str = "pjit"                 # "pjit" | "podwise" (manual pod axis)
+    remat: str = "full"                # "none" | "full" | "dots"
+    moe_dispatch: str = "einsum"       # "einsum" (GShard one-hot) | "gather"
+    compress_pod: str = "none"         # "none" | "bf16" | "int8_ef"
+    attn_impl: str = "scan"            # "scan" | "rect" | "triangular" | "pallas"
+    q_chunk: int = 2048
+    kv_chunk: int = 2048
+    donate: bool = True
+    scan_layers: bool = True
+    # --- beyond-paper optimizations (each a §Perf iteration) ---------------
+    layout: str = "tp"                 # "tp" (FSDPxTP) | "fsdp" (ZeRO-3:
+                                       # batch over data AND model; no TP
+                                       # activation all-reduces — needs
+                                       # global_batch % (data*model) == 0)
+    fused_head: bool = False           # chunked CE fused with the LM head
+    head_chunk: int = 512              # token chunk for the fused head
+    embed_mode: str = "gather"         # "gather" | "vocab_parallel"
+    accum_steps: int = 1               # gradient-accumulation microbatches
+    lru_chunk: int = 0                 # RG-LRU: chunk the associative scan
+    cache_write: str = "masked"        # "masked" (shardable everywhere) |
+                                       # "scatter" (DUS: 1x instead of 3x
+                                       # cache traffic; needs unsharded seq)
+    # --- measurement (roofline) mode ----------------------------------------
+    unroll_scans: bool = False         # python-loop the inner scans so
+                                       # cost_analysis counts every trip
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        base = ("pod", "data") if self.multi_pod else ("data",)
+        if self.layout == "fsdp":
+            base = base + ("model",)
+        return base
+
+    @property
+    def axis_sizes(self):
+        if self.mesh is None:
+            return {}
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    @property
+    def model_size(self) -> int:
+        return self.axis_sizes.get("model", 1)
+
+    @property
+    def data_size(self) -> int:
+        s = self.axis_sizes.get("data", 1)
+        if self.multi_pod:
+            s *= self.axis_sizes.get("pod", 1)
+        return s
+
+    def with_(self, **kw) -> "ParallelConfig":
+        return replace(self, **kw)
+
+
+NO_PARALLEL = ParallelConfig(mesh=None)
+
+
+def batch_spec(pcfg: ParallelConfig, *trailing) -> P:
+    """Batch dim over the data axes; trailing entries appended verbatim.
+
+    Under the fsdp layout the model axis belongs to the batch dim, so any
+    trailing "model" (TP) annotation is dropped."""
+    if pcfg.mesh is None:
+        return P()
+    if pcfg.layout == "fsdp":
+        trailing = tuple(None if t == "model" else t for t in trailing)
+    return P(pcfg.data_axes if len(pcfg.data_axes) > 1 else pcfg.data_axes[0],
+             *trailing)
+
+
+def _divisible(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def heads_spec(pcfg: ParallelConfig, n_heads: int, *, batch_dims=1, trailing=1):
+    """Spec for [batch, (seq), heads, d_head]-shaped activations."""
+    if pcfg.mesh is None:
+        return None
+    axes = [pcfg.data_axes if len(pcfg.data_axes) > 1 else pcfg.data_axes[0]]
+    axes += [None] * (batch_dims - 1)
+    use_tp = pcfg.layout == "tp" and _divisible(n_heads, pcfg.model_size)
+    axes += ["model" if use_tp else None]
+    axes += [None] * trailing
+    return P(*axes)
+
+
+def kv_cache_spec(pcfg: ParallelConfig, n_kv: int, seq: int) -> P:
+    """Spec for a [B, S, K, D] KV cache (leading group dim handled by caller).
+
+    Heads over ``model`` when divisible, else sequence (flash-decoding
+    partial-softmax), else replicated over model.
+    """
+    if pcfg.mesh is None:
+        return P()
+    b = pcfg.data_axes if len(pcfg.data_axes) > 1 else pcfg.data_axes[0]
+    if _divisible(n_kv, pcfg.model_size):
+        return P(b, None, "model", None)
+    if _divisible(seq, pcfg.model_size):
+        return P(b, "model", None, None)
+    return P(b, None, None, None)
+
+
+def validate_spec(spec: P, shape, sizes: dict) -> P:
+    """Drop spec axes that do not divide the corresponding dim."""
+    dims = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            dims.append(None if i >= len(shape) else ax)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        total = 1
+        for n in names:
+            total *= sizes.get(n, 1)
+        dims.append(ax if shape[i] % total == 0 else None)
+    return P(*dims)
+
+
+def constrain(x: jax.Array, pcfg: ParallelConfig, spec: Optional[P]):
+    """with_sharding_constraint that degrades gracefully: no-op without a
+    mesh, and any axis that does not divide its dim is dropped."""
+    if pcfg.mesh is None or spec is None:
+        return x
+    spec = validate_spec(spec, x.shape, pcfg.axis_sizes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(pcfg.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter path -> PartitionSpec rules
+# ---------------------------------------------------------------------------
+# Paths are '/'-joined key paths into the param tree. Leading "blocks/u<i>/"
+# (and "encoder/blocks/u<i>/") segments carry a stacked group dim, handled by
+# prefixing the matched spec with None.
+#
+# Order matters: first match wins.
+
+_RULES: Tuple[Tuple[str, P], ...] = (
+    # embeddings / head: vocab over model, d_model over data (FSDP)
+    (r"embed/w$", P("model", "data")),
+    (r"lm_head/w$", P("data", "model")),
+    # attention projections
+    (r"attn/wq$", P("data", "model")),
+    (r"attn/wk$", P("data", "model")),
+    (r"attn/wv$", P("data", "model")),
+    (r"attn/wo$", P("model", "data")),
+    (r"attn/b[qkv]$", P("model")),
+    (r"attn/(q_norm|k_norm)$", P(None)),
+    # dense FFN
+    (r"mlp/w(i|g)$", P("data", "model")),
+    (r"mlp/wo$", P("model", "data")),
+    # MoE: experts over model (EP), FSDP over data
+    (r"moe/router$", P("data", None)),
+    (r"moe/w(i|g)$", P("model", "data", None)),
+    (r"moe/wo$", P("model", None, "data")),
+    # RG-LRU block
+    (r"rglru/in_[xg]$", P("data", "model")),
+    (r"rglru/out$", P("model", "data")),
+    (r"rglru/conv_w$", P(None, "model")),
+    (r"rglru/(gate_a|gate_x)/w$", P(None, None, "model")),
+    (r"rglru/a_param$", P("model")),
+    # mLSTM block
+    (r"mlstm/up$", P("data", "model")),
+    (r"mlstm/down$", P("model", "data")),
+    (r"mlstm/conv_w$", P(None, "model")),
+    (r"mlstm/(q|k|v)/w$", P("model", None, None)),
+    (r"mlstm/(igate|fgate)/w$", P("model", None)),
+    (r"mlstm/(igate|fgate)/b$", P(None)),
+    (r"mlstm/out_norm$", P("model")),
+    # sLSTM block
+    (r"slstm/w_(i|f|z|o)$", P("data", "model")),
+    (r"slstm/r_(i|f|z|o)$", P(None, None, "model")),
+    (r"slstm/b_(i|f|z|o)$", P("model")),
+    # frontend projectors
+    (r"frontend/.*w.$", P("data", "model")),
+    # norms, biases, anything 1-D: replicated
+    (r".*", P()),
+)
+
+
+def _spec_for_path(path: str, leading_group_dim: bool) -> P:
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            if leading_group_dim and len(spec) > 0:
+                return P(None, *spec)
+            if leading_group_dim:
+                return P(None)
+            return spec
+    raise AssertionError("unreachable")
+
+
+def spec_matches(path: str, spec_len: int) -> P:
+    """Public helper for tests."""
+    return _spec_for_path(path, False)
+
+
+def param_specs_for(shape_tree, pcfg: ParallelConfig):
+    """Tree of PartitionSpecs parallel to the param tree.
+
+    Leaves under ``blocks/`` (scan-stacked) get a leading None for the group
+    dim. Specs are validated for divisibility against the mesh — any axis
+    whose size does not divide falls back to None (replicated) on that dim,
+    so every arch lowers on every mesh (e.g. 10-head recurrentgemma on
+    model=16).
+    """
+    from repro.utils.pytree import tree_map_with_path
+
+    sizes = pcfg.axis_sizes
+
+    def leaf(path: str, leaf_spec):
+        grouped = "blocks/" in path
+        spec = _spec_for_path(path, grouped)
+        if pcfg.mesh is None:
+            return P()
+        # validate divisibility per dim
+        dims = []
+        for i, ax in enumerate(spec):
+            if ax is None:
+                dims.append(None)
+                continue
+            names = ax if isinstance(ax, tuple) else (ax,)
+            total = 1
+            for n in names:
+                total *= sizes.get(n, 1)
+            if leaf_spec.shape[i] % total == 0:
+                dims.append(ax)
+            else:
+                dims.append(None)
+        return P(*dims)
+
+    return tree_map_with_path(leaf, shape_tree)
+
+
+def shardings_for(shape_tree, pcfg: ParallelConfig):
+    """NamedSharding tree (or None when mesh-less)."""
+    if pcfg.mesh is None:
+        return None
+    specs = param_specs_for(shape_tree, pcfg)
+    return jax.tree.map(lambda s: NamedSharding(pcfg.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,5 @@
+from repro.sector.chunk import ChunkMeta, FileMeta  # noqa: F401
+from repro.sector.client import SectorClient  # noqa: F401
+from repro.sector.master import SectorMaster  # noqa: F401
+from repro.sector.server import ChunkServer  # noqa: F401
+from repro.sector.topology import TERAFLOW_TESTBED, Topology  # noqa: F401

@@ -1,0 +1,224 @@
+"""Sector master: metadata index + Chord-style consistent-hash placement.
+
+The paper's routing layer locates the node holding metadata for a named
+entity; Sector currently uses Chord [Stoica et al. 2001]. In a TPU job the
+membership set is static-ish and a master can answer lookups in O(1), but we
+keep the *consistent-hash ring* (with virtual nodes) for chunk->server
+placement because it preserves Chord's key property we still need: **minimal
+data movement under elastic membership change** — when a server joins or
+dies, only ~1/n of chunk assignments move (tested).
+
+Failure handling: servers heartbeat on a simulated clock; missing heartbeats
+mark a server dead, drop it from the ring, and enqueue re-replication for
+every chunk that lost a replica (paper §3: "Automatic services ensure that
+after a failure drops a replica, an additional replica is created").
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.sector.acl import CommunityACL
+from repro.sector.chunk import CHUNK_SIZE, ChunkMeta, FileMeta
+from repro.sector.server import ChunkServer
+from repro.sector.topology import TERAFLOW_TESTBED, Topology
+
+V_NODES = 64  # virtual nodes per server
+
+
+def _h(key: str) -> int:
+    return int.from_bytes(hashlib.md5(key.encode()).digest()[:8], "big")
+
+
+class HashRing:
+    """Consistent-hash ring with virtual nodes."""
+
+    def __init__(self):
+        self._points: List[int] = []
+        self._owner: Dict[int, str] = {}
+
+    def add(self, server_id: str) -> None:
+        for v in range(V_NODES):
+            p = _h(f"{server_id}@{v}")
+            if p in self._owner:
+                continue
+            bisect.insort(self._points, p)
+            self._owner[p] = server_id
+
+    def remove(self, server_id: str) -> None:
+        for v in range(V_NODES):
+            p = _h(f"{server_id}@{v}")
+            if self._owner.get(p) == server_id:
+                del self._owner[p]
+                i = bisect.bisect_left(self._points, p)
+                if i < len(self._points) and self._points[i] == p:
+                    self._points.pop(i)
+
+    def servers(self) -> Set[str]:
+        return set(self._owner.values())
+
+    def place(self, key: str, n: int,
+              site_of: Optional[Dict[str, str]] = None) -> List[str]:
+        """Walk the ring clockwise from hash(key); prefer distinct sites
+        (rack/DC-aware replica placement) then fill with distinct servers."""
+        if not self._points:
+            return []
+        start = bisect.bisect_left(self._points, _h(key)) % len(self._points)
+        chosen: List[str] = []
+        sites_used: Set[str] = set()
+        # pass 1: distinct sites
+        for i in range(len(self._points)):
+            s = self._owner[self._points[(start + i) % len(self._points)]]
+            if s in chosen:
+                continue
+            site = site_of.get(s) if site_of else None
+            if site is not None and site in sites_used:
+                continue
+            chosen.append(s)
+            sites_used.add(site)
+            if len(chosen) == n:
+                return chosen
+        # pass 2: any distinct server
+        for i in range(len(self._points)):
+            s = self._owner[self._points[(start + i) % len(self._points)]]
+            if s not in chosen:
+                chosen.append(s)
+                if len(chosen) == n:
+                    break
+        return chosen
+
+
+class SectorMaster:
+    def __init__(self, topology: Topology = TERAFLOW_TESTBED,
+                 default_replication: int = 3,
+                 heartbeat_timeout: float = 30.0,
+                 chunk_size: int = CHUNK_SIZE):
+        self.topology = topology
+        self.default_replication = default_replication
+        self.heartbeat_timeout = heartbeat_timeout
+        self.chunk_size = chunk_size
+        self.ring = HashRing()
+        self.servers: Dict[str, ChunkServer] = {}
+        self.files: Dict[str, FileMeta] = {}
+        self.chunks: Dict[str, ChunkMeta] = {}
+        self.acl = CommunityACL()
+        self._heartbeat: Dict[str, float] = {}
+        self.under_replicated: Set[str] = set()
+
+    # ------------------------------------------------------------ membership
+    def register(self, server: ChunkServer, now: float = 0.0) -> None:
+        self.servers[server.server_id] = server
+        self.ring.add(server.server_id)
+        self._heartbeat[server.server_id] = now
+
+    def deregister(self, server_id: str) -> None:
+        """Graceful leave (or confirmed failure): drop from ring, flag every
+        chunk that lost a replica."""
+        self.ring.remove(server_id)
+        self._heartbeat.pop(server_id, None)
+        for ck in self.chunks.values():
+            if server_id in ck.locations:
+                ck.locations.discard(server_id)
+                if len(ck.locations) < self._repl(ck.file):
+                    self.under_replicated.add(ck.chunk_id)
+
+    def heartbeat(self, server_id: str, now: float) -> None:
+        if server_id in self.servers:
+            self._heartbeat[server_id] = now
+
+    def check_failures(self, now: float) -> List[str]:
+        """Mark servers with stale heartbeats dead. Returns the failed ids."""
+        dead = [s for s, t in self._heartbeat.items()
+                if now - t > self.heartbeat_timeout]
+        for s in dead:
+            self.deregister(s)
+        return dead
+
+    def _site_of(self) -> Dict[str, str]:
+        return {sid: srv.site for sid, srv in self.servers.items()
+                if sid in self.ring.servers()}
+
+    def _repl(self, file: str) -> int:
+        fm = self.files.get(file)
+        return fm.replication if fm else self.default_replication
+
+    # ------------------------------------------------------------- metadata
+    def create_file(self, name: str, size: int, owner: str,
+                    replication: Optional[int] = None) -> FileMeta:
+        self.acl.check_write(owner)
+        if name in self.files:
+            raise FileExistsError(name)
+        repl = replication or self.default_replication
+        n_chunks = max(1, -(-size // self.chunk_size))
+        fm = FileMeta(name, size, n_chunks, owner, repl)
+        for i in range(n_chunks):
+            cid = ChunkMeta.make_id(name, i)
+            fm.chunk_ids.append(cid)
+            self.chunks[cid] = ChunkMeta(cid, name, i, 0, "")
+        self.files[name] = fm
+        return fm
+
+    def placement(self, chunk_id: str) -> List[str]:
+        ck = self.chunks[chunk_id]
+        return self.ring.place(chunk_id, self._repl(ck.file),
+                               self._site_of())
+
+    def commit_chunk(self, chunk_id: str, server_id: str, size: int,
+                     digest: str) -> None:
+        ck = self.chunks[chunk_id]
+        ck.locations.add(server_id)
+        ck.size = size
+        ck.digest = digest
+        if len(ck.locations) >= self._repl(ck.file):
+            self.under_replicated.discard(chunk_id)
+
+    # --------------------------------------------------------------- lookup
+    def lookup(self, name: str, user: str = "public",
+               client_site: Optional[str] = None) -> List[ChunkMeta]:
+        """Paper §3 session, steps 1-2: resolve a name to chunk locations,
+        nearest replica first."""
+        self.acl.check_read(user, name)
+        if name not in self.files:
+            raise FileNotFoundError(name)
+        out = []
+        for cid in self.files[name].chunk_ids:
+            ck = self.chunks[cid]
+            locs = sorted(
+                ck.locations,
+                key=lambda s: self.topology.distance(
+                    client_site or "", self.servers[s].site)
+                if client_site else 0.0)
+            meta = ChunkMeta(ck.chunk_id, ck.file, ck.index, ck.size,
+                             ck.digest, ck.version, set(ck.locations))
+            meta.locations = locs  # ordered for the client
+            out.append(meta)
+        return out
+
+    # ---------------------------------------------------------- re-replicate
+    def repair_plan(self) -> List[Tuple[str, str, str]]:
+        """[(chunk_id, src_server, dst_server)] to restore replication."""
+        plan = []
+        site_of = self._site_of()
+        for cid in sorted(self.under_replicated):
+            ck = self.chunks[cid]
+            live = [s for s in ck.locations
+                    if s in self.servers and self.servers[s].alive]
+            if not live:
+                continue  # data loss: nothing to copy from (tested)
+            need = self._repl(ck.file) - len(live)
+            candidates = [s for s in self.ring.place(cid, self._repl(ck.file)
+                                                     + need, site_of)
+                          if s not in ck.locations]
+            for dst in candidates[:need]:
+                plan.append((cid, live[0], dst))
+        return plan
+
+    def stats(self) -> dict:
+        return {
+            "servers": len(self.ring.servers()),
+            "files": len(self.files),
+            "chunks": len(self.chunks),
+            "under_replicated": len(self.under_replicated),
+            "bytes": sum(f.size for f in self.files.values()),
+        }

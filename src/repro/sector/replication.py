@@ -1,0 +1,44 @@
+"""Replication daemon: periodic scan + repair loop (paper §3).
+
+In production this runs in the master's background thread; here it is a
+synchronous step function driven by the simulated clock so tests and the
+fault-tolerance examples can advance time deterministically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.sector.client import SectorClient
+from repro.sector.master import SectorMaster
+
+
+@dataclass
+class ReplicationDaemon:
+    master: SectorMaster
+    client: SectorClient
+    scan_interval: float = 10.0
+    _last_scan: float = 0.0
+
+    def tick(self, now: float) -> dict:
+        """Advance the daemon: detect failures, repair under-replication."""
+        report = {"failed": [], "repaired": 0}
+        report["failed"] = self.master.check_failures(now)
+        if now - self._last_scan >= self.scan_interval:
+            self._last_scan = now
+            report["repaired"] = self.client.run_repair()
+        return report
+
+    def verify_all(self) -> dict:
+        """Checksum-verify every replica (background scrubbing)."""
+        ok, bad = 0, 0
+        for ck in self.master.chunks.values():
+            for sid in list(ck.locations):
+                srv = self.master.servers.get(sid)
+                if srv is None or not srv.verify_chunk(ck.chunk_id, ck.digest):
+                    ck.locations.discard(sid)
+                    if len(ck.locations) < self.master._repl(ck.file):
+                        self.master.under_replicated.add(ck.chunk_id)
+                    bad += 1
+                else:
+                    ok += 1
+        return {"ok": ok, "bad": bad}

@@ -1,0 +1,77 @@
+"""Network topology: sites, links, and the Teraflow-testbed instance.
+
+The paper's testbed (§5.1): sites joined by 10 Gbps wide-area links with up
+to 200 ms RTT; each site is a small Opteron cluster. ``Topology`` carries
+per-site-pair (bandwidth, RTT, loss) and a distance function used for
+nearest-replica reads and locality-aware compute placement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+
+@dataclass(frozen=True)
+class Link:
+    bandwidth_bps: float   # raw link bandwidth, bits/s
+    rtt_s: float           # round-trip time, seconds
+    loss: float            # packet loss probability
+
+
+@dataclass
+class Topology:
+    sites: List[str]
+    links: Dict[Tuple[str, str], Link] = field(default_factory=dict)
+    local: Link = Link(10e9, 0.0002, 1e-7)  # intra-site LAN
+
+    def link(self, a: str, b: str) -> Link:
+        if a == b:
+            return self.local
+        return self.links.get((a, b)) or self.links[(b, a)]
+
+    def add(self, a: str, b: str, bandwidth_bps: float, rtt_s: float,
+            loss: float) -> None:
+        self.links[(a, b)] = Link(bandwidth_bps, rtt_s, loss)
+
+    def distance(self, a: str, b: str) -> float:
+        """Smaller is closer: RTT-dominated metric (paper reads choose the
+        nearest replica)."""
+        return self.link(a, b).rtt_s
+
+    def neighbours(self, site: str) -> List[str]:
+        return sorted(self.sites, key=lambda s: self.distance(site, s))
+
+
+def _teraflow() -> Topology:
+    """The paper's testbed: Chicago, Pasadena, McLean/Greenbelt, Tokyo,
+    Daejeon on 10 Gbps links. RTTs approximate the published geography
+    (furthest pair ~200 ms)."""
+    t = Topology(sites=["chicago", "pasadena", "greenbelt", "mclean",
+                        "tokyo", "daejeon"])
+    wan = 10e9
+    rtts = {
+        ("chicago", "pasadena"): 0.055,
+        ("chicago", "greenbelt"): 0.020,
+        ("chicago", "mclean"): 0.022,
+        ("chicago", "tokyo"): 0.130,
+        ("chicago", "daejeon"): 0.165,
+        ("pasadena", "greenbelt"): 0.070,
+        ("pasadena", "mclean"): 0.072,
+        ("pasadena", "tokyo"): 0.110,
+        ("pasadena", "daejeon"): 0.145,
+        ("greenbelt", "mclean"): 0.004,
+        ("greenbelt", "tokyo"): 0.150,
+        ("greenbelt", "daejeon"): 0.200,
+        ("mclean", "tokyo"): 0.150,
+        ("mclean", "daejeon"): 0.195,
+        ("tokyo", "daejeon"): 0.035,
+    }
+    for (a, b), rtt in rtts.items():
+        # long-haul paths see more residual loss than the LAN (~2e-3/s of
+        # RTT matches the Table-1 efficiency ordering)
+        loss = 1e-5 + rtt * 2e-3
+        t.add(a, b, wan, rtt, loss)
+    return t
+
+
+TERAFLOW_TESTBED = _teraflow()

@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeEngine, Request  # noqa: F401
+from repro.serve.sampler import SamplerConfig, sample  # noqa: F401

@@ -1,0 +1,135 @@
+"""Serving engine with continuous batching over a fixed slot pool.
+
+Decode runs as one jitted step over ``max_batch`` slots; requests stream in
+and out of slots without recompilation (continuous batching). Prefill is a
+second jitted program (batch=1) whose cache is spliced into the pool at the
+slot index. Finished slots (EOS or token budget) are recycled immediately.
+
+The KV pool is the serving twin of Sector's "data waits for the task": the
+cache shards stay resident on their devices; requests are routed to slots,
+never the other way around.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model
+from repro.parallel.sharding import NO_PARALLEL, ParallelConfig
+from repro.serve.sampler import SamplerConfig, sample
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 32
+    enc_frames: Optional[np.ndarray] = None
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params,
+                 pcfg: ParallelConfig = NO_PARALLEL,
+                 max_batch: int = 4, max_len: int = 256,
+                 eos_id: int = -1,
+                 scfg: SamplerConfig = SamplerConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.pcfg = pcfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.scfg = scfg
+        cross = max_len if cfg.is_encoder_decoder else 0
+        self.cache = model.init_cache(cfg, max_batch, max_len,
+                                      cross_len=cross)
+        self.pos = np.zeros(max_batch, np.int32)
+        self.tok = np.zeros(max_batch, np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self.rng = jax.random.PRNGKey(0)
+        self._rid = 0
+
+        self._decode = jax.jit(
+            lambda p, c, t, q: model.decode_step(p, c, t, q, cfg=cfg,
+                                                 pcfg=pcfg))
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cfg=cfg, pcfg=pcfg,
+                                       max_len=max_len))
+        self._insert = jax.jit(self._insert_impl)
+
+    @staticmethod
+    def _insert_impl(pool, new, slot):
+        def put(a, b):
+            # a: [G, B, ...]; b: [G, 1, ...]
+            idx = (0, slot) + (0,) * (a.ndim - 2)
+            return jax.lax.dynamic_update_slice(a, b.astype(a.dtype), idx)
+        return jax.tree.map(put, pool, new)
+
+    # ------------------------------------------------------------- requests
+    def submit(self, prompt: List[int], max_new: int = 32,
+               enc_frames: Optional[np.ndarray] = None) -> Request:
+        req = Request(self._rid, list(prompt), max_new, enc_frames)
+        self._rid += 1
+        self.queue.append(req)
+        return req
+
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            batch = {"inputs": jnp.asarray([req.prompt], jnp.int32)}
+            if self.cfg.is_encoder_decoder:
+                frames = req.enc_frames
+                if frames is None:
+                    frames = np.zeros((1, self.max_len, self.cfg.d_model),
+                                      np.float32)
+                batch["enc_frames"] = jnp.asarray(frames, jnp.bfloat16)
+            last_logits, cache1 = self._prefill(self.params, batch)
+            self.cache = self._insert(self.cache, cache1,
+                                      jnp.asarray(slot, jnp.int32))
+            self.rng, k = jax.random.split(self.rng)
+            tok = int(sample(last_logits, k, self.scfg)[0])
+            req.out.append(tok)
+            self.slot_req[slot] = req
+            self.pos[slot] = len(req.prompt)
+            self.tok[slot] = tok
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> int:
+        """One batched decode step. Returns #active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        tok = jnp.asarray(self.tok[:, None], jnp.int32)
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, tok, pos)
+        self.rng, k = jax.random.split(self.rng)
+        nxt = np.asarray(sample(logits, k, self.scfg))
+        for slot in active:
+            req = self.slot_req[slot]
+            t = int(nxt[slot])
+            req.out.append(t)
+            self.pos[slot] += 1
+            self.tok[slot] = t
+            if t == self.eos_id or len(req.out) >= req.max_new or \
+                    self.pos[slot] >= self.max_len - 1:
+                req.done = True
+                self.slot_req[slot] = None  # recycle immediately
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        steps = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1

@@ -1,0 +1,25 @@
+"""Token sampling: greedy / temperature / top-k."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0   # 0 = greedy
+    top_k: int = 0             # 0 = full softmax
+
+
+def sample(logits: jax.Array, rng: jax.Array,
+           scfg: SamplerConfig) -> jax.Array:
+    """logits: [B, V] -> tokens [B] int32."""
+    if scfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / scfg.temperature
+    if scfg.top_k:
+        kth = jax.lax.top_k(lf, scfg.top_k)[0][..., -1:]
+        lf = jnp.where(lf < kth, -1e30, lf)
+    return jax.random.categorical(rng, lf, axis=-1).astype(jnp.int32)

@@ -1,0 +1,3 @@
+from repro.train import optim  # noqa: F401
+from repro.train.checkpoint import SectorCheckpointer  # noqa: F401
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,75 @@
+"""Elastic scaling: survive device/host loss by remeshing + restoring.
+
+The 1000+-node posture (DESIGN.md §8): when a host dies mid-run,
+  1. the failure is detected (heartbeat timeout on the Sector side; a raised
+     device error on the JAX side),
+  2. the controller rebuilds a mesh without the lost host's devices — the
+     mesh shape shrinks along the ``data`` (or ``pod``) axis, never
+     ``model`` (TP degree is a property of the checkpointed layout),
+  3. the latest committed Sector checkpoint (params + optimizer + data
+     cursor) is restored onto the new mesh — placement is re-derived from
+     the PartitionSpecs, which are mesh-shape-agnostic,
+  4. training resumes; the consistent-hash ring keeps chunk reassignment to
+     ~1/n.
+
+On this CPU harness the "failure" is injected (a callback raising
+``HostFailure`` at a chosen step) and meshes are host-device meshes, but the
+remesh/restore path is the production code path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+import jax
+
+from repro.parallel.sharding import ParallelConfig
+from repro.train.trainer import Trainer
+
+
+class HostFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class ElasticController:
+    trainer: Trainer
+    make_mesh: Callable[[int], object]  # n_devices -> Mesh
+    max_restarts: int = 3
+
+    def run_with_failures(self, steps: int,
+                          fail_at: Optional[List[int]] = None) -> dict:
+        """Run ``steps`` steps; inject HostFailure at the given step indices
+        (simulating a lost host), remesh with one fewer 'device group', and
+        resume from the last committed checkpoint."""
+        fail_at = sorted(fail_at or [])
+        restarts = 0
+        lost_groups = 0
+        done = self.trainer.step_idx
+        target = done + steps
+        while done < target:
+            next_fail = fail_at[0] if fail_at else None
+            try:
+                run_until = min(target,
+                                next_fail if next_fail is not None
+                                else target)
+                n = run_until - done
+                if n > 0:
+                    self.trainer.run(n)
+                done = self.trainer.step_idx
+                if next_fail is not None and done >= next_fail:
+                    fail_at.pop(0)
+                    raise HostFailure(f"injected at step {done}")
+            except HostFailure:
+                restarts += 1
+                lost_groups += 1
+                if restarts > self.max_restarts:
+                    raise
+                # --- remesh: drop one group of devices, rebuild, restore ---
+                n_dev = max(1, jax.device_count() - lost_groups)
+                new_mesh = self.make_mesh(n_dev)
+                self.trainer.pcfg = self.trainer.pcfg.with_(mesh=new_mesh)
+                self.trainer._build()  # re-jit + restore from checkpoint
+                done = self.trainer.step_idx
+        return {"restarts": restarts, "final_step": done,
+                "history": self.trainer.history}

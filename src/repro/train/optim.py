@@ -1,0 +1,123 @@
+"""AdamW (from scratch) with fp32 master weights, + LR schedules.
+
+Optimizer state shards exactly like its parameter (ZeRO-style: the sharded
+``m``/``v``/``master`` trees inherit the param PartitionSpecs, which are FSDP
+over ``data`` x TP over ``model`` and replicated over ``pod``).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import sds
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # int8_ef cross-pod compression keeps a residual tree in the state
+    error_feedback: bool = False
+
+
+def warmup_cosine(lr: float, warmup: int, total: int) -> Callable:
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * (step + 1) / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def state_shapes(param_tree, ocfg: AdamWConfig) -> Dict:
+    """ShapeDtypeStruct tree for the optimizer state."""
+    f32 = lambda s: sds(s.shape, jnp.float32)
+    out = {
+        "step": sds((), jnp.int32),
+        "m": jax.tree.map(f32, param_tree),
+        "v": jax.tree.map(f32, param_tree),
+        "master": jax.tree.map(f32, param_tree),
+    }
+    if ocfg.error_feedback:
+        out["ef"] = jax.tree.map(f32, param_tree)
+    return out
+
+
+def init_state(params, ocfg: AdamWConfig):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    out = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": zeros,
+        "v": jax.tree.map(jnp.copy, zeros),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+    }
+    if ocfg.error_feedback:
+        out["ef"] = jax.tree.map(jnp.copy, zeros)
+    return out
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def _decay_mask(path: str) -> bool:
+    """Weight decay only on matrices (skip norms/biases/1-D gates)."""
+    leaf = path.rsplit("/", 1)[-1]
+    return not (leaf in ("scale",) or leaf.startswith("b")
+                or leaf.endswith("_norm") or leaf == "a_param")
+
+
+def apply_updates(params, grads, state, ocfg: AdamWConfig,
+                  lr_fn: Callable):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    from repro.utils.pytree import tree_flatten_with_paths
+
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, ocfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if ocfg.grad_clip else jnp.asarray(1.0, jnp.float32)
+    lr = lr_fn(state["step"])
+    b1, b2 = ocfg.b1, ocfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    paths = [p for p, _ in tree_flatten_with_paths(params)]
+    flat_p, td = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_w = jax.tree.leaves(state["master"])
+
+    new_p, new_m, new_v, new_w = [], [], [], []
+    for path, p, g, m, v, w in zip(paths, flat_p, flat_g, flat_m, flat_v,
+                                   flat_w):
+        gf = g.astype(jnp.float32) * clip
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * jnp.square(gf)
+        upd = (m2 / c1) / (jnp.sqrt(v2 / c2) + ocfg.eps)
+        if _decay_mask(path):
+            upd = upd + ocfg.weight_decay * w
+        w2 = w - lr * upd
+        new_m.append(m2)
+        new_v.append(v2)
+        new_w.append(w2)
+        new_p.append(w2.astype(p.dtype))
+
+    new_state = dict(state)
+    new_state["step"] = step
+    new_state["m"] = jax.tree.unflatten(td, new_m)
+    new_state["v"] = jax.tree.unflatten(td, new_v)
+    new_state["master"] = jax.tree.unflatten(td, new_w)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return jax.tree.unflatten(td, new_p), new_state, metrics

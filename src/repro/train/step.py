@@ -1,0 +1,248 @@
+"""Train / serve step builders + the sharding trees the launcher jits with.
+
+``make_train_step`` returns (step_fn, sharding trees). Two modes:
+
+  * ``pjit``    — one global jit; XLA inserts every collective (baseline).
+  * ``podwise`` — the step body runs in a ``shard_map`` that is *manual*
+    over the ``pod`` axis and *auto* over ``data``/``model``: each pod
+    computes its gradient with intra-pod FSDP/TP collectives, then the
+    **only cross-pod traffic** is the explicit (optionally compressed)
+    gradient reduction — the paper's wide-area transport discipline.
+
+A training step is literally a two-stage Sphere job (DESIGN.md §2):
+stage 1 = local fwd/bwd UDF over the pod's chunk of the batch,
+shuffle = the cross-pod gradient reduction, stage 2 = optimizer UDF.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model
+from repro.models.common import sds
+from repro.parallel import collectives
+from repro.parallel.sharding import (ParallelConfig, batch_spec,
+                                     kv_cache_spec, param_specs_for)
+from repro.train import optim
+from repro.utils.pytree import tree_map_with_path
+
+try:
+    from jax import shard_map as _shard_map  # jax >= 0.6
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+# ---------------------------------------------------------------------------
+# Sharding spec trees
+# ---------------------------------------------------------------------------
+
+def batch_specs_for(batch_tree, pcfg: ParallelConfig):
+    """Every batch leaf shards its leading (global-batch) dim — unless the
+    batch does not divide the data axes (e.g. long_500k's batch=1)."""
+    from repro.parallel.sharding import validate_spec
+
+    def leaf(s):
+        spec = batch_spec(pcfg, *([None] * (len(s.shape) - 1)))
+        return validate_spec(spec, s.shape, pcfg.axis_sizes)
+
+    return jax.tree.map(leaf, batch_tree)
+
+
+def opt_state_specs_for(param_tree, pcfg: ParallelConfig,
+                        ocfg: optim.AdamWConfig):
+    pspecs = param_specs_for(param_tree, pcfg)
+    out = {"step": P(), "m": pspecs, "v": pspecs, "master": pspecs}
+    if ocfg.error_feedback:
+        out["ef"] = jax.tree.map(
+            lambda s: P("pod", *s) if pcfg.multi_pod else s, pspecs,
+            is_leaf=lambda x: isinstance(x, P))
+    return out
+
+
+def cache_specs_for(cache_tree, pcfg: ParallelConfig):
+    """PartitionSpecs for a decode cache / recurrent state tree.
+
+    Leaves are [G, B, ...]: group dim replicated, batch over (pod, data),
+    then for KV caches heads over ``model`` when divisible else the sequence
+    dim (flash-decoding); recurrent states shard their first model-divisible
+    feature dim.
+    """
+    if pcfg.mesh is None:
+        return jax.tree.map(lambda s: P(), cache_tree)
+    from repro.parallel.sharding import validate_spec
+    b = pcfg.data_axes if len(pcfg.data_axes) > 1 else pcfg.data_axes[0]
+    msz = pcfg.model_size
+
+    def leaf(path: str, s):
+        name = path.split("/")[-1]
+        shape = s.shape
+        if name in ("k", "v", "xk", "xv"):
+            g, bb, S, K, D = shape
+            if K % msz == 0:
+                spec = P(None, b, None, "model", None)
+            elif S % msz == 0:
+                spec = P(None, b, "model", None, None)
+            else:
+                spec = P(None, b, None, None, None)
+        elif name == "kpos":
+            S = shape[2]
+            spec = P(None, b, "model") if S % msz == 0 else P(None, b, None)
+        else:
+            # recurrent state: [G, B, ...feature dims]
+            dims = [None, b]
+            placed = False
+            for d in shape[2:]:
+                if not placed and d % msz == 0 and d >= msz:
+                    dims.append("model")
+                    placed = True
+                else:
+                    dims.append(None)
+            spec = P(*dims)
+        return validate_spec(spec, shape, pcfg.axis_sizes)
+
+    return tree_map_with_path(leaf, cache_tree)
+
+
+def to_shardings(spec_tree, mesh: Optional[Mesh]):
+    if mesh is None:
+        return None
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def _value_and_grad_accum(params, batch, *, cfg, pcfg):
+    """fwd/bwd with optional gradient accumulation over microbatches.
+
+    With ``accum_steps > 1`` the global batch is split along dim 0 and
+    scanned, accumulating fp32 grads — activation memory divides by
+    ``accum_steps`` at the cost of re-running the (already FSDP-gathered)
+    weights per microbatch."""
+    n = pcfg.accum_steps
+    if n <= 1:
+        return jax.value_and_grad(
+            lambda p: model.loss_fn(p, batch, cfg=cfg, pcfg=pcfg),
+            has_aux=True)(params)
+
+    def split(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    gfn = jax.value_and_grad(
+        lambda p, b: model.loss_fn(p, b, cfg=cfg, pcfg=pcfg),
+        has_aux=True)
+
+    def body(acc, mb):
+        (loss, metrics), grads = gfn(params, mb)
+        acc_g, acc_l, acc_m = acc
+        acc_g = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32) / n, acc_g, grads)
+        acc_m = jax.tree.map(lambda a, m: a + m / n, acc_m, metrics)
+        return (acc_g, acc_l + loss / n, acc_m), None
+
+    zero_g = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    zero_m = {k: jnp.zeros((), jnp.float32)
+              for k in ("nll", "z_loss", "accuracy", "tokens", "aux_loss")}
+    if pcfg.unroll_scans:
+        acc = (zero_g, jnp.zeros((), jnp.float32), zero_m)
+        for i in range(n):
+            acc, _ = body(acc, jax.tree.map(lambda x: x[i], micro))
+    else:
+        acc, _ = jax.lax.scan(
+            body, (zero_g, jnp.zeros((), jnp.float32), zero_m), micro)
+    grads, loss, metrics = acc
+    return (loss, metrics), grads
+
+
+def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                    ocfg: optim.AdamWConfig, lr_fn: Callable):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    if pcfg.mode == "pjit" or not pcfg.multi_pod:
+        def step(params, opt_state, batch):
+            (loss, metrics), grads = _value_and_grad_accum(
+                params, batch, cfg=cfg, pcfg=pcfg)
+            new_params, new_opt, om = optim.apply_updates(
+                params, grads, opt_state, ocfg, lr_fn)
+            return new_params, new_opt, {**metrics, **om, "loss": loss}
+        return step
+
+    if pcfg.mode != "podwise":
+        raise ValueError(pcfg.mode)
+
+    inner_pcfg = pcfg.with_(multi_pod=False)  # inside: pod axis is manual
+
+    def pod_body(params, opt_state, batch):
+        (loss, metrics), grads = _value_and_grad_accum(
+            params, batch, cfg=cfg, pcfg=inner_pcfg)
+        ef = opt_state.get("ef")
+        grads, new_ef = collectives.cross_pod_mean(
+            grads, axis="pod", compress=pcfg.compress_pod, ef_state=ef)
+        loss = jax.lax.pmean(loss, "pod")
+        metrics = jax.tree.map(lambda x: jax.lax.pmean(x, "pod"), metrics)
+        new_params, new_opt, om = optim.apply_updates(
+            params, grads, opt_state, ocfg, lr_fn)
+        if new_ef is not None:
+            new_opt["ef"] = new_ef
+        return new_params, new_opt, {**metrics, **om, "loss": loss}
+
+    def step(params, opt_state, batch):
+        pshape = model.param_shapes(cfg)
+        rep = jax.tree.map(lambda s: P(), pshape)
+        opt_in = {"step": P(), "m": rep, "v": rep, "master": rep}
+        if "ef" in opt_state:
+            opt_in["ef"] = jax.tree.map(lambda s: P("pod"), pshape)
+        batch_in = jax.tree.map(lambda x: P("pod"), batch)
+        out_specs = (rep, dict(opt_in), jax.tree.map(lambda _: P(),
+                     {"nll": 0, "z_loss": 0, "accuracy": 0, "tokens": 0,
+                      "aux_loss": 0, "grad_norm": 0, "lr": 0, "loss": 0}))
+        fn = _shard_map(pod_body, mesh=pcfg.mesh,
+                        in_specs=(rep, opt_in, batch_in),
+                        out_specs=out_specs,
+                        check_vma=False,
+                        axis_names=frozenset({"pod"}))  # manual over pod only
+        return fn(params, opt_state, batch)
+
+    return step
+
+
+def train_state_specs(cfg: ModelConfig, pcfg: ParallelConfig,
+                      ocfg: optim.AdamWConfig, batch_tree):
+    pshapes = model.param_shapes(cfg)
+    return (param_specs_for(pshapes, pcfg),
+            opt_state_specs_for(pshapes, pcfg, ocfg),
+            batch_specs_for(batch_tree, pcfg))
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig, pcfg: ParallelConfig):
+    """Greedy decode step: (params, cache, token [B,1], pos [B]) ->
+    (next_token [B,1], new_cache)."""
+
+    def serve_step(params, cache, token, pos):
+        logits, new_cache = model.decode_step(params, cache, token, pos,
+                                              cfg=cfg, pcfg=pcfg)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                      max_len: int = 0):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cfg=cfg, pcfg=pcfg,
+                             max_len=max_len)
+    return prefill_step

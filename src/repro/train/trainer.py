@@ -1,0 +1,97 @@
+"""The training loop: Sector data -> Sphere-staged step -> Sector checkpoints."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataPipeline
+from repro.models import model
+from repro.parallel.sharding import ParallelConfig, param_specs_for
+from repro.train import optim
+from repro.train.checkpoint import SectorCheckpointer
+from repro.train.step import (batch_specs_for, make_train_step,
+                              opt_state_specs_for, to_shardings)
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    lr: float = 3e-4
+    warmup: int = 20
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig,
+                 tcfg: TrainerConfig, pipeline: DataPipeline,
+                 checkpointer: Optional[SectorCheckpointer] = None):
+        self.cfg = cfg
+        self.pcfg = pcfg
+        self.tcfg = tcfg
+        self.pipeline = pipeline
+        self.ckpt = checkpointer
+        self.ocfg = optim.AdamWConfig(
+            lr=tcfg.lr,
+            error_feedback=(pcfg.compress_pod == "int8_ef"))
+        self.lr_fn = optim.warmup_cosine(tcfg.lr, tcfg.warmup, tcfg.steps)
+        self.history: List[Dict] = []
+        self.step_idx = 0
+        self._build()
+
+    def _build(self) -> None:
+        cfg, pcfg = self.cfg, self.pcfg
+        params = model.init_params(cfg, jax.random.PRNGKey(self.tcfg.seed))
+        opt = optim.init_state(params, self.ocfg)
+        restored = None
+        if self.ckpt is not None:
+            restored = self.ckpt.restore_latest(
+                {"params": params, "opt": opt})
+        if restored is not None:
+            params, opt = restored["params"], restored["opt"]
+            self.step_idx = restored["step"]
+            if "cursor" in restored.get("extra", {}):
+                self.pipeline.load_state_dict(restored["extra"]["cursor"])
+        if pcfg.mesh is not None:
+            pshapes = model.param_shapes(cfg)
+            psh = to_shardings(param_specs_for(pshapes, pcfg), pcfg.mesh)
+            osh = to_shardings(
+                opt_state_specs_for(pshapes, pcfg, self.ocfg), pcfg.mesh)
+            params = jax.device_put(params, psh)
+            opt = jax.device_put(opt, osh)
+        self.params, self.opt = params, opt
+        step_fn = make_train_step(cfg, pcfg, self.ocfg, self.lr_fn)
+        self._step = jax.jit(step_fn,
+                             donate_argnums=(0, 1) if pcfg.donate else ())
+
+    def run(self, steps: Optional[int] = None) -> List[Dict]:
+        n = steps or self.tcfg.steps
+        it = iter(self.pipeline)
+        t0 = time.time()
+        for _ in range(n):
+            batch = next(it)
+            self.params, self.opt, metrics = self._step(
+                self.params, self.opt, batch)
+            self.step_idx += 1
+            if self.step_idx % self.tcfg.log_every == 0 or \
+                    self.step_idx == n:
+                rec = {k: float(v) for k, v in metrics.items()}
+                rec["step"] = self.step_idx
+                rec["wall_s"] = time.time() - t0
+                self.history.append(rec)
+            if self.ckpt is not None and \
+                    self.step_idx % self.tcfg.ckpt_every == 0:
+                self.save_checkpoint()
+        return self.history
+
+    def save_checkpoint(self) -> None:
+        self.ckpt.save(self.step_idx, {
+            "params": self.params, "opt": self.opt,
+            "extra": {"cursor": self.pipeline.state_dict()},
+        })

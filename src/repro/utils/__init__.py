@@ -1,0 +1,15 @@
+from repro.utils.pytree import (
+    tree_bytes,
+    tree_count,
+    tree_flatten_with_paths,
+    tree_map_with_path,
+    tree_zeros_like,
+)
+
+__all__ = [
+    "tree_bytes",
+    "tree_count",
+    "tree_flatten_with_paths",
+    "tree_map_with_path",
+    "tree_zeros_like",
+]

@@ -1,0 +1,48 @@
+"""Pytree helpers shared across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_count(tree) -> int:
+    """Total number of scalar elements in a pytree of arrays."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays / ShapeDtypeStructs."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), tree)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_flatten_with_paths(tree):
+    """Returns [(path_str, leaf), ...]."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(path), leaf) for path, leaf in flat]
+
+
+def tree_map_with_path(fn, tree):
+    """Map fn(path_str, leaf) over a pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(_path_str(path), leaf), tree
+    )

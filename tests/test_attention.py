@@ -1,0 +1,103 @@
+"""Attention implementation equivalences (scan / triangular / windowed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (chunked_attention, decode_attention,
+                                    init_cache, update_cache)
+
+
+def ref_attention(q, k, v, causal, window):
+    B, T, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bthd,bshd->bhts", q, kr) / np.sqrt(D)
+    tpos = jnp.arange(T)[:, None]
+    spos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= spos <= tpos
+    if window:
+        mask &= tpos - spos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhts,bshd->bthd", p, vr)
+
+
+@pytest.mark.parametrize("impl", ["scan", "triangular"])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 8), (False, 0)])
+@pytest.mark.parametrize("T,H,K", [(32, 4, 2), (48, 4, 4), (32, 4, 1)])
+def test_chunked_vs_ref(impl, causal, window, T, H, K):
+    if impl == "triangular" and not causal:
+        pytest.skip("triangular is causal-only")
+    B, D = 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, K, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, K, D))
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            q_chunk=16, kv_chunk=16, impl=impl)
+    ref = ref_attention(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_decode_ring_vs_full():
+    """Ring (windowed) decode == full-cache decode with window mask."""
+    B, H, K, D, W, S = 1, 2, 1, 8, 6, 12
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (B, 1, H, D))
+
+    full = init_cache.__wrapped__ if hasattr(init_cache, "__wrapped__") \
+        else None
+    from repro.configs import ARCHS
+    cfg = ARCHS["recurrentgemma-2b"].reduced().replace(
+        n_heads=H, n_kv_heads=K, d_head=D, local_window=W)
+    ring = init_cache(cfg, B, S, ring=True, window=W)
+    fullc = init_cache(cfg, B, S, ring=False)
+
+    ks = jax.random.normal(jax.random.PRNGKey(1), (S, B, 1, K, D))
+    vs = jax.random.normal(jax.random.PRNGKey(2), (S, B, 1, K, D))
+    for t in range(S):
+        pos = jnp.full((B,), t, jnp.int32)
+        ring = update_cache(ring, ks[t], vs[t], pos)
+        fullc = update_cache(fullc, ks[t], vs[t], pos)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    o_ring = decode_attention(q, ring, pos, window=W)
+    o_full = decode_attention(q, fullc, pos, window=W)
+    np.testing.assert_allclose(np.asarray(o_ring), np.asarray(o_full),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_q_offset_continuation():
+    """Chunked attention with q_offset == suffix of the full result."""
+    B, T, H, K, D = 1, 32, 2, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, K, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, K, D))
+    full = chunked_attention(q, k, v, causal=True, q_chunk=8, kv_chunk=8)
+    tail = chunked_attention(q[:, 16:], k, v, causal=True, q_chunk=8,
+                             kv_chunk=8, q_offset=16)
+    np.testing.assert_allclose(np.asarray(full[:, 16:]), np.asarray(tail),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_scatter_vs_masked_cache_write():
+    """Both cache-write modes must produce identical caches."""
+    from repro.models.attention import update_cache, init_cache
+    from repro.configs import ARCHS
+    cfg = ARCHS["qwen3-8b"].reduced()
+    B, S = 2, 8
+    c1 = init_cache(cfg, B, S, ring=False)
+    c2 = init_cache(cfg, B, S, ring=False)
+    for t in range(5):
+        kn = jax.random.normal(jax.random.PRNGKey(t), (B, 1, cfg.n_kv_heads,
+                                                       cfg.d_head))
+        vn = jax.random.normal(jax.random.PRNGKey(t + 99), kn.shape)
+        pos = jnp.asarray([t, (t + 2) % S], jnp.int32)
+        c1 = update_cache(c1, kn, vn, pos, mode="masked")
+        c2 = update_cache(c2, kn, vn, pos, mode="scatter")
+    for k in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(c1[k]), np.asarray(c2[k]))

@@ -1,0 +1,62 @@
+"""Registry + config invariants, incl. published param-count checks."""
+import pytest
+
+from repro.configs import ARCHS, cells, get_config
+from repro.configs.base import SHAPES
+
+# Published (approximate) parameter counts, billions.
+PUBLISHED_B = {
+    "qwen2.5-3b": 3.1,
+    "deepseek-7b": 6.9,
+    "gemma3-12b": 12.0,
+    "qwen3-8b": 8.2,
+    "qwen3-moe-30b-a3b": 30.5,
+    "dbrx-132b": 132.0,
+    "llava-next-mistral-7b": 7.3,
+    "seamless-m4t-large-v2": 2.3,
+    "xlstm-1.3b": 1.4,
+    "recurrentgemma-2b": 2.7,
+}
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_count_matches_published(name):
+    got = ARCHS[name].param_count() / 1e9
+    want = PUBLISHED_B[name]
+    assert abs(got - want) / want < 0.15, (name, got, want)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_config_valid(name):
+    cfg = ARCHS[name]
+    assert cfg.n_layers % cfg.pattern_len == 0
+    assert cfg.n_heads % cfg.n_kv_heads == 0
+    assert cfg.padded_vocab % 128 == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+    red = cfg.reduced()
+    assert red.n_layers % red.pattern_len == 0
+    assert red.param_count() < 50e6
+
+
+def test_moe_active_params():
+    moe = get_config("qwen3-moe-30b-a3b")
+    assert moe.active_param_count() < 0.2 * moe.param_count()
+    dbrx = get_config("dbrx-132b")
+    assert 0.2 < dbrx.active_param_count() / dbrx.param_count() < 0.4
+
+
+def test_cells_skip_rule():
+    cs = cells()
+    # every arch has train/prefill/decode
+    for name in ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert (name, s) in cs
+    # long_500k only for sub-quadratic-decode archs
+    long_archs = {a for a, s in cs if s == "long_500k"}
+    assert long_archs == {"gemma3-12b", "xlstm-1.3b", "recurrentgemma-2b"}
+    assert len(cs) == 33
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("nope")

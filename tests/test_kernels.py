@@ -1,0 +1,83 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bucket_partition import (bucket_partition,
+                                            bucket_partition_ref)
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.kmeans_assign import kmeans_assign, kmeans_assign_ref
+from repro.kernels.rg_lru_scan import lru_scan_ref, rg_lru_scan
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,S,H,K,D,bq,bk", [
+    (64, 64, 2, 2, 32, 16, 16),    # MHA
+    (64, 64, 4, 2, 32, 32, 16),    # GQA
+    (32, 96, 2, 1, 64, 16, 32),    # MQA, cross-length
+    (50, 70, 2, 2, 32, 16, 16),    # non-multiple lengths (padding path)
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 24), (False, 0)])
+def test_flash_attention_sweep(dtype, T, S, H, K, D, bq, bk, causal, window):
+    if causal and S > T:
+        S = T  # causal with longer S is ill-posed in this harness
+    B = 2
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, D), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, K, D), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, K, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+    ref = attention_ref(qh, kh, vh, causal=causal, window=window) \
+        .reshape(B, H, T, D).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,T,W,bw", [(1, 16, 32, 16), (2, 33, 64, 32),
+                                      (3, 8, 48, 64)])
+def test_rg_lru_scan_sweep(B, T, W, bw):
+    a = jax.random.uniform(jax.random.PRNGKey(0), (B, T, W), jnp.float32,
+                           0.7, 0.999)
+    b = jax.random.normal(jax.random.PRNGKey(1), (B, T, W)) * 0.1
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (B, W))
+    h, hl = rg_lru_scan(a, b, h0, block_w=bw, interpret=True)
+    hr, hlr = lru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hlr),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("N,D,K,bn", [(100, 8, 4, 32), (513, 16, 7, 128),
+                                      (64, 32, 16, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kmeans_assign_sweep(N, D, K, bn, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(3), (N, D), dtype)
+    c = jax.random.normal(jax.random.PRNGKey(4), (K, D), dtype)
+    ids, d2 = kmeans_assign(x, c, block_n=bn, interpret=True)
+    idr, d2r = kmeans_assign_ref(x, c)
+    assert (np.asarray(ids) == np.asarray(idr)).mean() > 0.99  # dtype ties
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2r),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("N,nb,bn", [(100, 4, 32), (2048, 16, 512),
+                                     (777, 8, 256)])
+def test_bucket_partition_sweep(N, nb, bn):
+    keys = jax.random.randint(jax.random.PRNGKey(5), (N,), 0, 1 << 30,
+                              dtype=jnp.uint32)
+    bounds = jnp.sort(jax.random.randint(jax.random.PRNGKey(6), (nb - 1,),
+                                         0, 1 << 30, dtype=jnp.uint32))
+    ids, hist = bucket_partition(keys, bounds, n_buckets=nb, block_n=bn,
+                                 interpret=True)
+    idr, histr = bucket_partition_ref(keys, bounds, nb)
+    assert (np.asarray(ids) == np.asarray(idr)).all()
+    assert (np.asarray(hist) == np.asarray(histr)).all()
+    assert int(hist.sum()) == N

@@ -1,0 +1,71 @@
+"""Recurrent blocks: chunkwise-parallel forms vs sequential oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import rglru, xlstm
+from repro.models.common import materialize
+from repro.models.transformer import _zero_state
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 4, 8])
+def test_mlstm_chunkwise_vs_sequential(chunk, monkeypatch):
+    cfg = ARCHS["xlstm-1.3b"].reduced()
+    p = materialize(xlstm.mlstm_shapes(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, cfg.d_model))
+    oracle = xlstm.mlstm_sequential_oracle(p, x, cfg=cfg)
+    monkeypatch.setattr(xlstm, "CHUNK", chunk)
+    out, _ = xlstm.mlstm_apply(p, x, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_mlstm_streaming_state():
+    cfg = ARCHS["xlstm-1.3b"].reduced()
+    p = materialize(xlstm.mlstm_shapes(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 12, cfg.d_model))
+    full, _ = xlstm.mlstm_apply(p, x, cfg=cfg)
+    st = _zero_state(xlstm.mlstm_state_shapes(cfg, 2))
+    o1, st = xlstm.mlstm_apply(p, x[:, :7], cfg=cfg, state=st)
+    o2, _ = xlstm.mlstm_apply(p, x[:, 7:], cfg=cfg, state=st)
+    got = jnp.concatenate([o1, o2], axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_slstm_streaming_state():
+    cfg = ARCHS["xlstm-1.3b"].reduced()
+    p = materialize(xlstm.slstm_shapes(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 12, cfg.d_model))
+    full, _ = xlstm.slstm_apply(p, x, cfg=cfg)
+    st = _zero_state(xlstm.slstm_state_shapes(cfg, 2))
+    o1, st = xlstm.slstm_apply(p, x[:, :5], cfg=cfg, state=st)
+    o2, _ = xlstm.slstm_apply(p, x[:, 5:], cfg=cfg, state=st)
+    got = jnp.concatenate([o1, o2], axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_rglru_streaming_vs_batch():
+    cfg = ARCHS["recurrentgemma-2b"].reduced()
+    p = materialize(rglru.shapes(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 12, cfg.d_model))
+    full, _ = rglru.apply(p, x, cfg=cfg)
+    st = _zero_state(rglru.state_shapes(cfg, 2))
+    o1, st = rglru.apply(p, x[:, :6], cfg=cfg, state=st)
+    o2, _ = rglru.apply(p, x[:, 6:], cfg=cfg, state=st)
+    got = jnp.concatenate([o1, o2], axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rglru_decay_bounded():
+    """RG-LRU recurrence weight a in (0, 1) for any input (stability)."""
+    cfg = ARCHS["recurrentgemma-2b"].reduced()
+    p = materialize(rglru.shapes(cfg), jax.random.PRNGKey(0))
+    x = 100.0 * jax.random.normal(jax.random.PRNGKey(2),
+                                  (1, 8, cfg.d_model))
+    out, _ = rglru.apply(p, x, cfg=cfg)
+    assert bool(jnp.isfinite(out).all())

@@ -1,0 +1,161 @@
+"""Sector storage cloud: placement, replication, failures, ACLs, transport."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_cloud
+from repro.sector.acl import AclError
+from repro.sector.master import HashRing
+from repro.sector.replication import ReplicationDaemon
+from repro.sector.topology import TERAFLOW_TESTBED, Link
+from repro.sector.transport import (llpr, simulate_transfer, tcp_throughput,
+                                    udt_throughput)
+
+
+# ------------------------------- hash ring ----------------------------------
+
+def test_ring_minimal_movement():
+    """Consistent hashing: removing 1 of n servers moves ~1/n of keys."""
+    ring = HashRing()
+    for i in range(10):
+        ring.add(f"s{i}")
+    keys = [f"file#{i}" for i in range(2000)]
+    before = {k: ring.place(k, 1)[0] for k in keys}
+    ring.remove("s3")
+    after = {k: ring.place(k, 1)[0] for k in keys}
+    moved = sum(before[k] != after[k] for k in keys)
+    assert moved / len(keys) < 0.25  # ~1/10 expected, generous bound
+    # keys that were NOT on s3 must not move
+    for k in keys:
+        if before[k] != "s3":
+            assert after[k] == before[k]
+
+
+@given(st.lists(st.text(min_size=1, max_size=8), min_size=1, max_size=8,
+                unique=True),
+       st.text(min_size=1, max_size=16))
+@settings(max_examples=50, deadline=None)
+def test_ring_placement_properties(servers, key):
+    ring = HashRing()
+    for s in servers:
+        ring.add(s)
+    got = ring.place(key, 3)
+    assert len(got) == min(3, len(servers))
+    assert len(set(got)) == len(got)           # distinct servers
+    assert set(got) <= set(servers)
+    assert ring.place(key, 3) == got           # deterministic
+
+
+# ------------------------------ replication ---------------------------------
+
+def test_failure_detection_and_repair(tmp_path):
+    master, servers, client = make_cloud(tmp_path, chunk_size=1024)
+    data = np.random.default_rng(0).bytes(20_000)
+    client.upload("f", data, replication=3)
+    daemon = ReplicationDaemon(master, client)
+    servers[0].kill()
+    servers[2].kill()
+    for t in (0, 10, 20, 40):
+        for s in servers:
+            if s.alive:
+                master.heartbeat(s.server_id, t)
+    rep = daemon.tick(40.0)
+    assert set(rep["failed"]) == {"s0", "s2"}
+    assert master.stats()["under_replicated"] == 0
+    assert client.download("f") == data
+
+
+def test_whole_site_loss_keeps_checkpoints_readable(tmp_path):
+    master, servers, client = make_cloud(tmp_path, chunk_size=1024,
+                                         n_servers=8)
+    data = b"y" * 9000
+    client.upload("ckpt", data, replication=3)
+    # replicas are placed on distinct sites -> killing one whole site is safe
+    for s in servers:
+        if s.site == "chicago":
+            s.kill()
+            master.deregister(s.server_id)
+    assert client.download("ckpt") == data
+
+
+def test_scrubbing_detects_corruption(tmp_path):
+    master, servers, client = make_cloud(tmp_path, chunk_size=1024)
+    client.upload("f", b"z" * 3000, replication=2)
+    daemon = ReplicationDaemon(master, client)
+    ck = next(iter(master.chunks.values()))
+    sid = next(iter(ck.locations))
+    srv = master.servers[sid]
+    srv._path(ck.chunk_id).write_bytes(b"CORRUPTED!")
+    rep = daemon.verify_all()
+    assert rep["bad"] == 1
+    assert client.download("f") == b"z" * 3000  # healthy replica survives
+
+
+def test_data_loss_reported(tmp_path):
+    master, servers, client = make_cloud(tmp_path, chunk_size=1024,
+                                         n_servers=3)
+    client.upload("f", b"q" * 2000, replication=2)
+    for s in servers:
+        s.kill()
+    with pytest.raises(IOError):
+        client.download("f")
+
+
+# ---------------------------------- ACL -------------------------------------
+
+def test_acl_semantics(tmp_path):
+    master, servers, client = make_cloud(tmp_path)
+    client.upload("open-data", b"hello")
+    # public CAN read
+    from repro.sector import SectorClient
+    pub = SectorClient(master, "stranger", "tokyo")
+    assert pub.download("open-data") == b"hello"
+    # public canNOT write
+    with pytest.raises(AclError):
+        pub.upload("evil", b"x")
+    # community member without write grant canNOT write
+    master.acl.add_member("bob")
+    bob = SectorClient(master, "bob", "tokyo")
+    with pytest.raises(AclError):
+        bob.upload("bobs", b"x")
+    master.acl.grant_write("bob")
+    bob.upload("bobs", b"x")  # now ok
+    # restricted files are community-only
+    master.acl.read_restricted.add("open-data")
+    with pytest.raises(AclError):
+        pub.download("open-data")
+    assert bob.download("open-data") == b"hello"
+
+
+# ------------------------------- transport ----------------------------------
+
+def test_udt_beats_tcp_on_long_fat_links():
+    wan = TERAFLOW_TESTBED.link("chicago", "tokyo")
+    assert udt_throughput(wan) > 10 * tcp_throughput(wan)
+
+
+def test_llpr_in_paper_band():
+    """Table 1: UDT LLPR between 0.5 and 1.0 on every testbed route."""
+    lan = TERAFLOW_TESTBED.local
+    nbytes = 10 * 1024**3
+    for (a, b) in [("greenbelt", "daejeon"), ("chicago", "pasadena"),
+                   ("chicago", "greenbelt"), ("chicago", "tokyo"),
+                   ("tokyo", "pasadena"), ("tokyo", "chicago")]:
+        wan = TERAFLOW_TESTBED.link(a, b)
+        r_udt = llpr(nbytes, wan, lan, "udt")
+        r_tcp = llpr(nbytes, wan, lan, "tcp")
+        assert 0.5 <= r_udt <= 1.0, (a, b, r_udt)
+        assert r_tcp < 0.2, (a, b, r_tcp)      # TCP collapses on the WAN
+        assert r_udt > r_tcp
+
+
+@given(st.floats(1e-7, 1e-3), st.floats(0.001, 0.3))
+@settings(max_examples=40, deadline=None)
+def test_transport_monotonicity(loss, rtt):
+    """More loss or RTT never increases throughput; transfers conserve."""
+    link = Link(10e9, rtt, loss)
+    worse = Link(10e9, rtt, loss * 2)
+    assert udt_throughput(worse) <= udt_throughput(link) + 1
+    assert tcp_throughput(worse) <= tcp_throughput(link) + 1
+    t = simulate_transfer(1 << 20, link, "udt")
+    assert t.seconds > 0 and t.throughput_bps > 0

@@ -1,0 +1,74 @@
+"""Sharding rules + spec validation (no multi-device needed)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.models import model
+from repro.models.common import sds
+from repro.parallel.sharding import (ParallelConfig, param_specs_for,
+                                     spec_matches, validate_spec)
+from repro.utils.pytree import tree_flatten_with_paths
+
+
+def test_rule_table():
+    assert spec_matches("blocks/u0/attn/wq", 2) == P("data", "model")
+    assert spec_matches("blocks/u0/attn/wo", 2) == P("model", "data")
+    assert spec_matches("embed/w", 2) == P("model", "data")
+    assert spec_matches("blocks/u3/moe/wi", 3) == P("model", "data", None)
+    assert spec_matches("blocks/u0/norm1/scale", 1) == P()
+    assert spec_matches("final_norm/scale", 1) == P()
+
+
+def test_validate_spec_drops_nondivisible():
+    sizes = {"data": 16, "model": 16, "pod": 2}
+    assert validate_spec(P(("pod", "data")), (1,), sizes) == P(None)
+    assert validate_spec(P(("pod", "data")), (64,), sizes) == P(("pod",
+                                                                 "data"))
+    assert validate_spec(P("model", None), (10, 4), sizes) == P(None, None)
+    assert validate_spec(P("model", None), (32, 4), sizes) == P("model",
+                                                                None)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_specs_rank_and_divisibility(name):
+    """Every param gets a spec of matching rank; every named axis divides."""
+    cfg = ARCHS[name]
+    import jax as _jax
+    mesh = _jax.sharding.Mesh(
+        __import__("numpy").array(_jax.devices()[:1]).reshape(1, 1),
+        ("data", "model"))
+    pcfg = ParallelConfig(mesh=mesh)
+    shapes = model.param_shapes(cfg)
+    specs = param_specs_for(shapes, pcfg)
+    ss = dict(tree_flatten_with_paths(specs))
+    for path, leaf in tree_flatten_with_paths(shapes):
+        spec = ss[path]
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+
+
+def test_stacked_blocks_get_leading_none():
+    cfg = ARCHS["qwen3-8b"]
+    import numpy as np
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                             ("data", "model"))
+    specs = param_specs_for(model.param_shapes(cfg),
+                            ParallelConfig(mesh=mesh))
+    flat = dict(tree_flatten_with_paths(specs))
+    wq = flat["blocks/layer0/attn/wq"]
+    assert wq[0] is None  # group dim replicated
+
+
+def test_no_pod_sharding_of_params():
+    """Paper rule: parameters are never sharded across the pod (WAN) axis."""
+    cfg = ARCHS["qwen3-8b"]
+    import numpy as np
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1),
+                             ("pod", "data", "model"))
+    specs = param_specs_for(model.param_shapes(cfg),
+                            ParallelConfig(mesh=mesh, multi_pod=True))
+    for path, spec in tree_flatten_with_paths(specs):
+        for entry in spec:
+            names = entry if isinstance(entry, tuple) else (entry,)
+            assert "pod" not in names, path

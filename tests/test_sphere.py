@@ -1,0 +1,120 @@
+"""Sphere engine: scheduling, stragglers, failures; k-means convergence."""
+import numpy as np
+import pytest
+
+from conftest import make_cloud
+from repro.core import SphereEngine, SphereJob, SphereStage, hash_partitioner
+from repro.core.kmeans import encode_points, kmeans_sphere
+from repro.core.shuffle import range_partitioner, sample_boundaries
+
+
+def _upload_records(client, name, n=64, rec=100, seed=0, replication=2):
+    rng = np.random.default_rng(seed)
+    data = rng.bytes(n * rec)
+    client.upload(name, data, replication=replication)
+    return data
+
+
+def test_identity_job_preserves_records(tmp_path):
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    data = _upload_records(client, "f", n=100, rec=100)
+    job = SphereJob("id", "f", [SphereStage("id", lambda rs: list(rs))],
+                    record_size=100)
+    outs, rep = SphereEngine(master, client).run(job)
+    got = sorted(b"".join(outs)[i:i + 100] for i in range(0, 100 * 100, 100))
+    want = sorted(data[i:i + 100] for i in range(0, 100 * 100, 100))
+    assert got == want
+    assert rep.tasks > 0
+    assert rep.locality_fraction > 0.9  # compute went to the data
+
+
+def test_straggler_speculation(tmp_path):
+    """Two workers, one 50x slower, every chunk replicated on both: the
+    greedy scheduler eventually queues a task on the straggler (its idle
+    start beats the fast worker's deep queue), and speculation must win it
+    back onto the fast replica."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000,
+                                         n_servers=2)
+    _upload_records(client, "f", n=400, rec=100, replication=2)
+    slow = {servers[0].server_id: 0.02, servers[1].server_id: 1.0}
+    eng = SphereEngine(master, client, speeds=slow, speculate_factor=1.5)
+    job = SphereJob("id", "f", [SphereStage("id", lambda rs: list(rs))],
+                    record_size=100)
+    outs, rep = eng.run(job)
+    assert rep.speculated > 0
+    assert rep.speculation_wins > 0
+    assert sum(len(o) for o in outs) == 400 * 100  # nothing lost
+
+
+def test_worker_failure_retry(tmp_path):
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    data = _upload_records(client, "f", n=50, rec=100, replication=3)
+    servers[1].kill()
+    master.deregister("s1")
+    job = SphereJob("id", "f", [SphereStage("id", lambda rs: list(rs))],
+                    record_size=100)
+    outs, rep = SphereEngine(master, client).run(job)
+    assert len(b"".join(outs)) == len(data)
+
+
+def test_two_stage_shuffle_wordcount_style(tmp_path):
+    """Stage1 maps records to keyed partials, shuffle groups by key,
+    stage2 reduces — generalized MapReduce as the paper claims."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=800)
+    rng = np.random.default_rng(1)
+    vals = rng.integers(0, 8, size=400).astype("<u4")
+    client.upload("nums", vals.tobytes(), replication=2)
+
+    def map_udf(records):
+        out = []
+        for r in records:
+            v = int(np.frombuffer(r, "<u4")[0])
+            out.append(np.array([v % 4, 1], "<u4").tobytes())
+        return out
+
+    def reduce_udf(records):
+        acc = {}
+        for r in records:
+            k, c = np.frombuffer(r, "<u4")
+            acc[int(k)] = acc.get(int(k), 0) + int(c)
+        return [np.array([k, v], "<u4").tobytes()
+                for k, v in sorted(acc.items())]
+
+    job = SphereJob("wc", "nums", [
+        SphereStage("map", map_udf, partitioner=hash_partitioner(4),
+                    n_buckets=4),
+        SphereStage("reduce", reduce_udf),
+    ], record_size=4)
+    outs, rep = SphereEngine(master, client).run(job)
+    counts = {}
+    for blob in outs:
+        for i in range(0, len(blob), 8):
+            k, v = np.frombuffer(blob[i:i + 8], "<u4")
+            counts[int(k)] = counts.get(int(k), 0) + int(v)
+    want = {k: int((vals % 4 == k).sum()) for k in range(4)}
+    assert counts == want
+
+
+def test_kmeans_converges(tmp_path):
+    master, servers, client = make_cloud(tmp_path, chunk_size=4096)
+    rng = np.random.default_rng(0)
+    true_c = np.array([[0, 0], [8, 8]], np.float32)
+    pts = np.concatenate([rng.normal(c, 0.3, (150, 2)) for c in true_c]) \
+        .astype(np.float32)
+    client.upload("pts", encode_points(pts), replication=2)
+    cents, rep = kmeans_sphere(SphereEngine(master, client), "pts",
+                               dim=2, k=2, iters=6)
+    cents = cents[np.argsort(cents[:, 0])]
+    assert np.abs(cents - true_c).max() < 0.5
+    assert rep.locality_fraction > 0.8
+
+
+def test_range_partitioner_boundaries():
+    recs = [bytes([i]) * 10 for i in range(100)]
+    bounds = sample_boundaries(recs, 4, key_bytes=10)
+    part = range_partitioner(bounds)
+    ids = [part(r, 4) for r in recs]
+    # partitions are contiguous and roughly balanced
+    assert ids == sorted(ids)
+    counts = [ids.count(i) for i in range(4)]
+    assert max(counts) - min(counts) <= 30
