@@ -121,8 +121,8 @@ def load_all(tag: str = "") -> List[dict]:
     return out
 
 
-def main() -> None:
-    rows = load_all()
+def main(smoke: bool = False) -> list:
+    rows = load_all()  # parses whatever dry-run artifacts exist — cheap
     print("cell,compute_s,memory_s,collective_s,dominant,useful_ratio,"
           "roofline_fraction,temp_gb,fits_hbm")
     for r in rows:
@@ -130,6 +130,7 @@ def main() -> None:
               f"{r['collective_s']:.4e},{r['dominant']},"
               f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f},"
               f"{r['temp_gb']:.1f},{r['fits_hbm']}")
+    return rows
 
 
 if __name__ == "__main__":

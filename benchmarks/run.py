@@ -1,35 +1,69 @@
 """Benchmark aggregator: one section per paper table + the roofline table.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--smoke] [--out-dir DIR]
+
+Each section's structured result is written to ``BENCH_<section>.json`` in
+``--out-dir`` (default: current directory). ``--smoke`` runs every table at
+tiny scale — the CI smoke job uses it to prove the benchmarks execute
+end-to-end and to upload the JSON artifacts; any section that raises makes
+the process exit non-zero.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
 import traceback
 
 
-def _section(name: str, fn) -> None:
+def _section(name: str, fn, *, smoke: bool, out_dir: str) -> bool:
     print(f"\n== {name} " + "=" * max(1, 60 - len(name)))
     t0 = time.time()
+    ok = True
     try:
-        fn()
-    except Exception as e:  # keep the harness running
+        result = fn(smoke=smoke)
+    except Exception as e:  # keep the harness running, fail at exit
         print(f"ERROR,{type(e).__name__}: {e}")
         traceback.print_exc()
-    print(f"-- {name} done in {time.time() - t0:.1f}s")
+        result = {"error": f"{type(e).__name__}: {e}"}
+        ok = False
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"section": name, "smoke": smoke, "ok": ok,
+                   "result": result}, f, indent=2, default=str)
+    print(f"-- {name} done in {time.time() - t0:.1f}s -> {path}")
+    return ok
 
 
-def main() -> None:
-    from benchmarks import table1_llpr, table2_kmeans, table3_terasort
-    from benchmarks import roofline
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale run of every table (CI smoke job)")
+    ap.add_argument("--out-dir", default=".",
+                    help="where to write BENCH_*.json (default: cwd)")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out_dir, exist_ok=True)
 
-    _section("Table 1: LLPR (UDT vs TCP over the Teraflow testbed)",
-             table1_llpr.main)
-    _section("Table 2: Sphere k-means scaling", table2_kmeans.main)
-    _section("Table 3: TeraSort — Sphere vs Hadoop-style barrier",
-             table3_terasort.main)
-    _section("Roofline (from multi-pod dry-run artifacts)", roofline.main)
+    from benchmarks import (roofline, table1_llpr, table2_kmeans,
+                            table3_terasort)
+
+    sections = [
+        ("table1_llpr", table1_llpr.main),
+        ("table2_kmeans", table2_kmeans.main),
+        ("table3_terasort", table3_terasort.main),
+        ("roofline", roofline.main),
+    ]
+    failed = [name for name, fn in sections
+              if not _section(name, fn, smoke=args.smoke,
+                              out_dir=args.out_dir)]
+    if failed:
+        print(f"\nFAILED sections: {', '.join(failed)}")
+        return 1
+    print(f"\nall {len(sections)} sections ok")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -40,12 +40,14 @@ def run() -> list:
     return rows
 
 
-def main() -> None:
+def main(smoke: bool = False) -> list:
+    rows = run()  # analytic — already tiny, same scale in smoke mode
     print("route,udt_mbps,llpr_udt,paper_mbps,paper_llpr,tcp_mbps,llpr_tcp")
-    for r in run():
+    for r in rows:
         print(f"{r['route']},{r['udt_mbps']},{r['llpr_udt']},"
               f"{r['paper_mbps']},{r['paper_llpr']},{r['tcp_mbps']},"
               f"{r['llpr_tcp']}")
+    return rows
 
 
 if __name__ == "__main__":

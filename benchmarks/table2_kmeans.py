@@ -5,9 +5,14 @@ time scales near-linearly in records. We run the same Sphere job at CPU-
 feasible sizes, report simulated wall time (the engine's deterministic cost
 model over the Teraflow topology) plus real UDF execution, and fit the
 scaling exponent (paper: ~1 = linear).
+
+Runs on both record backends: ``bytes`` loops per chunk in numpy, ``array``
+packs points into RecordBatches and runs one jitted assign UDF per chunk
+batch. Both must converge to the same centroids (same seed, same data).
 """
 from __future__ import annotations
 
+import sys
 import tempfile
 import time
 
@@ -18,55 +23,72 @@ from repro.core.kmeans import encode_points, kmeans_sphere
 from repro.sector import ChunkServer, SectorClient, SectorMaster
 
 SIZES = [500, 5_000, 50_000, 500_000]
+SMOKE_SIZES = [500, 5_000]
 DIM = 8
 K = 10
 
 
-def run() -> list:
+def _make_cloud():
+    tmp = tempfile.mkdtemp(prefix="t2_")
+    master = SectorMaster(chunk_size=256 * 1024)
+    for i, site in enumerate(master.topology.sites):
+        master.register(ChunkServer(f"s{i}", site, tmp))
+    master.acl.add_member("bench")
+    master.acl.grant_write("bench")
+    client = SectorClient(master, "bench", "chicago")
+    return master, client
+
+
+def run(sizes=SIZES) -> list:
     rows = []
-    for n in SIZES:
-        tmp = tempfile.mkdtemp(prefix="t2_")
-        master = SectorMaster(chunk_size=256 * 1024)
-        for i, site in enumerate(master.topology.sites):
-            master.register(ChunkServer(f"s{i}", site, tmp))
-        master.acl.add_member("bench")
-        master.acl.grant_write("bench")
-        client = SectorClient(master, "bench", "chicago")
+    for n in sizes:
         pts = np.random.default_rng(0).normal(size=(n, DIM)) \
             .astype(np.float32)
-        client.upload("pts", encode_points(pts), replication=2)
-        eng = SphereEngine(master, client)
-        t0 = time.time()
-        _, rep = kmeans_sphere(eng, "pts", dim=DIM, k=K, iters=3)
-        rows.append({
-            "records": n,
-            "sector_files": master.stats()["chunks"],
-            "sim_seconds": round(rep.sim_seconds, 4),
-            "real_seconds": round(time.time() - t0, 3),
-            "locality": round(rep.locality_fraction, 3),
-        })
+        row = {"records": n}
+        cents = {}
+        for backend in ("bytes", "array"):
+            master, client = _make_cloud()
+            client.upload("pts", encode_points(pts), replication=2)
+            eng = SphereEngine(master, client)
+            t0 = time.time()
+            c, rep = kmeans_sphere(eng, "pts", dim=DIM, k=K, iters=3,
+                                   backend=backend)
+            cents[backend] = c
+            row.update({
+                "sector_files": master.stats()["chunks"],
+                f"{backend}_sim_seconds": round(rep.sim_seconds, 4),
+                f"{backend}_real_seconds": round(time.time() - t0, 3),
+                "locality": round(rep.locality_fraction, 3),
+            })
+        np.testing.assert_allclose(cents["bytes"], cents["array"],
+                                   rtol=1e-3, atol=1e-3)
+        row["udf_speedup"] = round(row["bytes_real_seconds"]
+                                   / max(row["array_real_seconds"], 1e-9), 2)
+        rows.append(row)
     # scaling exponent of real UDF compute between the two largest sizes
     # (paper Table 2 is linear-in-records: 1e6 -> 1e8 records is 60x time).
     # sim_seconds stays near-flat until records saturate the 6-site cluster
     # — that's the engine parallelising dispatch, an improvement over the
     # paper's ~1.8 s/file serial master (85 min / 2850 files).
     a, b = rows[-2], rows[-1]
-    expo = (np.log(b["real_seconds"] / max(a["real_seconds"], 1e-9))
+    expo = (np.log(b["bytes_real_seconds"]
+                   / max(a["bytes_real_seconds"], 1e-9))
             / np.log(b["records"] / a["records"]))
     for r in rows:
         r["scaling_exponent_tail"] = round(float(expo), 2)
     return rows
 
 
-def main() -> None:
-    rows = run()
-    print("records,sector_files,sim_seconds,real_seconds,locality,"
-          "scaling_exponent_tail")
+def main(smoke: bool = False) -> list:
+    rows = run(SMOKE_SIZES if smoke else SIZES)
+    cols = ["records", "sector_files", "bytes_sim_seconds",
+            "bytes_real_seconds", "array_real_seconds", "udf_speedup",
+            "locality", "scaling_exponent_tail"]
+    print(",".join(cols))
     for r in rows:
-        print(f"{r['records']},{r['sector_files']},{r['sim_seconds']},"
-              f"{r['real_seconds']},{r['locality']},"
-              f"{r['scaling_exponent_tail']}")
+        print(",".join(str(r[c]) for c in cols))
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv)

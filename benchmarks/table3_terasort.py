@@ -2,16 +2,24 @@
 
 Paper result: Sphere sorts 10GB/node ~2-3x faster than Hadoop on the same
 6-node cluster (and Hadoop used 4 cores/node vs Sphere's 1). The structural
-reasons, reproduced at two levels:
+reasons, reproduced at three levels:
 
 1. **Host level** (the paper's actual setting): the Sphere engine runs
    generate/partition/sort as UDF stages over Sector chunks with locality
    and pipelined shuffle; the Hadoop-style run disables locality (tasks go
    round-robin regardless of replica placement, charging WAN movement) and
    pays a materialisation barrier between map and reduce. Reported time is
-   the engine's deterministic cost model over the Teraflow topology.
+   the engine's deterministic cost model over the Teraflow topology. Runs
+   on BOTH record backends (bytes reference and the array backend built on
+   the Pallas bucket-partition kernel) and checks their outputs agree
+   byte-for-byte.
 
-2. **Device level** (the TPU twin): ``distributed_sort`` (sample ->
+2. **Partition microbench**: the shuffle hot loop in isolation at >= 1M
+   records — per-record Python binary search vs one bucket_partition
+   kernel call + argsort/gather. This is the records/sec speedup the
+   array backend exists for.
+
+3. **Device level** (the TPU twin): ``distributed_sort`` (sample ->
    bucketize -> all_to_all -> local sort) vs ``barrier_sort`` (all-gather
    everything, sort, slice). On 1 physical CPU core wall-time is not
    meaningful, so the headline is exchanged bytes: all_to_all moves each
@@ -23,18 +31,21 @@ import os
 import subprocess
 import sys
 import tempfile
+import time
 
 import numpy as np
 
-from repro.core import SphereEngine, SphereJob, SphereStage
-from repro.core.shuffle import range_partitioner, sample_boundaries
+from repro.core import SphereEngine, SphereJob
+from repro.core.records import RecordBatch, scatter_by_ids
+from repro.core.shuffle import (partition_batch, range_partitioner,
+                                sample_boundaries, terasort_stages)
 from repro.sector import ChunkServer, SectorClient, SectorMaster
 
 RECORD = 100   # TeraSort: 100-byte records, 10-byte keys
 KEY = 10
 
 
-def _make_cloud(no_locality: bool = False):
+def _make_cloud():
     tmp = tempfile.mkdtemp(prefix="t3_")
     # record-aligned chunk size (fixed-size records must not straddle chunks)
     master = SectorMaster(chunk_size=5000 * RECORD)
@@ -48,11 +59,9 @@ def _make_cloud(no_locality: bool = False):
 
 def _gen_records(n: int, seed: int = 0) -> bytes:
     rng = np.random.default_rng(seed)
-    keys = rng.bytes(n * KEY)
-    out = bytearray()
-    for i in range(n):
-        out += keys[i * KEY:(i + 1) * KEY] + b"v" * (RECORD - KEY)
-    return bytes(out)
+    keys = rng.integers(0, 256, size=(n, KEY), dtype=np.uint8)
+    payload = np.full((n, RECORD - KEY), ord("v"), np.uint8)
+    return np.concatenate([keys, payload], axis=1).tobytes()
 
 
 class _NoLocalityEngine(SphereEngine):
@@ -65,46 +74,117 @@ class _NoLocalityEngine(SphereEngine):
         t = super()._run_stage(job, stage, tasks, parts, rep,
                                first_stage=first_stage)
         # barrier materialisation: write + read back the stage output
-        nbytes = sum(sum(len(r) for r in parts[w]) for w in parts)
+        nbytes = sum(sum(len(r) if isinstance(r, bytes) else r.nbytes
+                         for r in parts[w]) for w in parts)
         return t + 2 * nbytes / 400e6  # disk write+read at 400 MB/s
 
 
+def _terasort_job(bounds, backend: str) -> SphereJob:
+    return SphereJob("terasort", "tera",
+                     terasort_stages(bounds, backend, 6, key_bytes=KEY),
+                     record_size=RECORD, backend=backend)
+
+
+def _check_sorted(outputs, n_records: int) -> list:
+    allrec = []
+    for blob in outputs:
+        recs = [blob[i:i + RECORD] for i in range(0, len(blob), RECORD)]
+        assert recs == sorted(recs, key=lambda r: r[:KEY])
+        allrec.extend(recs)
+    assert len(allrec) == n_records
+    return allrec
+
+
 def run_host_level(n_records: int = 50_000) -> dict:
+    """Sphere vs Hadoop-style on the bytes backend, plus the same Sphere
+    job on the array backend (outputs must agree byte-for-byte)."""
     data = _gen_records(n_records)
     sample = [data[i:i + RECORD]
               for i in range(0, min(len(data), 200 * RECORD), RECORD)]
-    bounds = sample_boundaries(sample, 6, key_bytes=KEY)
-
-    def sort_udf(records):
-        return sorted(records, key=lambda r: r[:KEY])
-
-    def make_job():
-        return SphereJob("terasort", "tera", [
-            SphereStage("partition", lambda rs: list(rs),
-                        partitioner=range_partitioner(bounds), n_buckets=6),
-            SphereStage("sort", sort_udf),
-        ], record_size=RECORD)
+    # 4-byte boundaries: exact parity between the bytes comparison and the
+    # kernel's uint32 comparison (see core/shuffle.py)
+    bounds = sample_boundaries(sample, 6, key_bytes=4)
 
     out = {}
-    for label, engine_cls in (("sphere", SphereEngine),
-                              ("hadoop_style", _NoLocalityEngine)):
+    baseline = None
+    for label, engine_cls, backend in (
+            ("sphere", SphereEngine, "bytes"),
+            ("hadoop_style", _NoLocalityEngine, "bytes"),
+            ("sphere_array", SphereEngine, "array")):
         master, client = _make_cloud()
         client.upload("tera", data, replication=3)
         eng = engine_cls(master, client)
-        outputs, rep = eng.run(make_job())
-        # verify global sortedness across buckets
-        allrec = []
-        for blob in outputs:
-            recs = [blob[i:i + RECORD] for i in range(0, len(blob), RECORD)]
-            assert recs == sorted(recs, key=lambda r: r[:KEY])
-            allrec.extend(recs)
-        assert len(allrec) == n_records
-        out[label] = {"sim_seconds": round(rep.sim_seconds, 3),
-                      "locality": round(rep.locality_fraction, 3),
-                      "bytes_moved": rep.bytes_moved}
+        outputs, rep = eng.run(_terasort_job(bounds, backend))
+        allrec = _check_sorted(outputs, n_records)
+        if engine_cls is SphereEngine:
+            if baseline is None:
+                baseline = allrec
+            else:
+                assert allrec == baseline, "backends disagree"
+        out[label] = {
+            "backend": backend,
+            "sim_seconds": round(rep.sim_seconds, 3),
+            "locality": round(rep.locality_fraction, 3),
+            "bytes_moved": rep.bytes_moved,
+            "partition_seconds": round(rep.partition_seconds, 4),
+            "partition_rec_per_s": round(
+                rep.partitioned_records / max(rep.partition_seconds, 1e-9)),
+        }
     out["speedup"] = round(out["hadoop_style"]["sim_seconds"]
                            / out["sphere"]["sim_seconds"], 2)
     return out
+
+
+def run_partition_bench(n_records: int = 1_000_000, n_buckets: int = 16,
+                        repeats: int = 3) -> dict:
+    """The shuffle hot loop at scale: per-record Python partitioning vs
+    the Pallas bucket-partition kernel + argsort/gather, min-of-N wall
+    time each (array path warmed once so jit compile is excluded — both
+    backends report steady-state throughput)."""
+    import jax
+
+    blob = _gen_records(n_records)
+    records = [blob[i:i + RECORD] for i in range(0, len(blob), RECORD)]
+    bounds = sample_boundaries(records[:1000], n_buckets, key_bytes=4)
+    part = range_partitioner(bounds)
+
+    def bytes_run():
+        buckets = [[] for _ in range(n_buckets)]
+        for r in records:
+            buckets[part(r, n_buckets)].append(r)
+        return buckets
+
+    batch = RecordBatch.from_bytes(blob, RECORD)
+
+    def array_run():
+        ids, hist = partition_batch(batch, part, n_buckets)
+        pieces = scatter_by_ids(batch, ids, hist)
+        jax.block_until_ready([p.data for p in pieces])
+        return pieces
+
+    def _timed(fn):
+        t0 = time.perf_counter()
+        out = fn()
+        return time.perf_counter() - t0, out
+
+    runs = [_timed(bytes_run) for _ in range(repeats)]
+    t_bytes, buckets = min(runs, key=lambda r: r[0])
+    array_run()  # warm: jit compile + constant folding
+    runs = [_timed(array_run) for _ in range(repeats)]
+    t_array, pieces = min(runs, key=lambda r: r[0])
+
+    # parity spot-check on the timed outputs: identical per-bucket counts
+    assert [len(b) for b in buckets] == [p.num_records for p in pieces]
+
+    return {
+        "records": n_records,
+        "n_buckets": n_buckets,
+        "bytes_seconds": round(t_bytes, 3),
+        "array_seconds": round(t_array, 3),
+        "bytes_rec_per_s": round(n_records / t_bytes),
+        "array_rec_per_s": round(n_records / t_array),
+        "speedup": round(t_bytes / t_array, 1),
+    }
 
 
 _DEVICE_BENCH = """
@@ -112,7 +192,7 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.core.spmd import distributed_sort, barrier_sort
 from repro.launch.mesh import make_flat_mesh
 mesh = make_flat_mesh()
-N = 1 << 18
+N = {n}
 keys = jax.random.randint(jax.random.PRNGKey(0), (N,), 0, 1 << 30,
                           dtype=jnp.uint32)
 out, valid = jax.jit(lambda k: distributed_sort(k, mesh))(keys)
@@ -122,17 +202,17 @@ assert np.array_equal(got, np.sort(np.asarray(keys)))
 outb = jax.jit(lambda k: barrier_sort(k, mesh))(keys)
 assert np.array_equal(np.asarray(outb).reshape(-1), np.sort(np.asarray(keys)))
 n = mesh.devices.size
-print(f"{N*4},{N*4*n}")
+print(f"{{N*4}},{{N*4*n}}")
 """
 
 
-def run_device_level() -> dict:
+def run_device_level(n_keys: int = 1 << 18) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    out = subprocess.run([sys.executable, "-c", _DEVICE_BENCH],
-                         capture_output=True, text=True, env=env,
-                         timeout=560)
+    out = subprocess.run(
+        [sys.executable, "-c", _DEVICE_BENCH.format(n=n_keys)],
+        capture_output=True, text=True, env=env, timeout=560)
     assert out.returncode == 0, out.stderr[-2000:]
     b_s, b_h = out.stdout.strip().split("\n")[-1].split(",")
     return {"bytes_all_to_all": int(b_s), "bytes_barrier": int(b_h),
@@ -140,17 +220,22 @@ def run_device_level() -> dict:
             "correct": True}
 
 
-def main() -> None:
-    host = run_host_level()
+def main(smoke: bool = False) -> dict:
+    host = run_host_level(5_000 if smoke else 50_000)
     print("level,metric,value")
-    for label in ("sphere", "hadoop_style"):
+    for label in ("sphere", "hadoop_style", "sphere_array"):
         for k, v in host[label].items():
             print(f"host:{label},{k},{v}")
     print(f"host,speedup,{host['speedup']}  (paper band: 2-3x)")
-    dev = run_device_level()
+    part = run_partition_bench(100_000 if smoke else 1_000_000,
+                               repeats=2 if smoke else 3)
+    for k, v in part.items():
+        print(f"partition,{k},{v}")
+    dev = run_device_level(1 << 14 if smoke else 1 << 18)
     for k, v in dev.items():
         print(f"device,{k},{v}")
+    return {"host": host, "partition": part, "device": dev}
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv)

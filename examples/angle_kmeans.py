@@ -4,8 +4,12 @@ Sensor nodes at four sites package anonymised packet windows into feature
 files stored in Sector; Sphere clusters each window with k-means; a temporal
 analysis of the per-window cluster models flags anomalous behaviour.
 
-    PYTHONPATH=src python examples/angle_kmeans.py
+    PYTHONPATH=src python examples/angle_kmeans.py [--backend {array,bytes}]
+
+``--backend array`` (default) clusters each window with the jitted
+RecordBatch UDF; ``--backend bytes`` is the per-chunk numpy reference.
 """
+import argparse
 import tempfile
 
 import numpy as np
@@ -16,6 +20,10 @@ from repro.sector import ChunkServer, SectorClient, SectorMaster
 
 SITES = ["chicago", "greenbelt", "pasadena", "tokyo"]  # sensor sites
 DIM, K, WINDOWS = 6, 4, 8
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--backend", choices=("array", "bytes"), default="array")
+backend = ap.parse_args().backend
 
 tmp = tempfile.mkdtemp()
 master = SectorMaster(chunk_size=96 * 1024)
@@ -39,7 +47,8 @@ for w in range(WINDOWS):
                   encode_points(pts.astype(np.float32)), replication=2)
     cents, rep = kmeans_sphere(SphereEngine(master, client),
                                f"angle/window_{w:03d}.f32",
-                               dim=DIM, k=K + 1, iters=6, seed=1)
+                               dim=DIM, k=K + 1, iters=6, seed=1,
+                               backend=backend)
     models.append(cents)
     print(f"window {w}: clustered "
           f"(locality {rep.locality_fraction:.0%}, "

@@ -1,16 +1,25 @@
 """TeraSort on Sphere (paper §5.4): distributed sort of 100-byte records.
 
-    PYTHONPATH=src python examples/terasort.py
+    PYTHONPATH=src python examples/terasort.py [--backend {array,bytes}]
+
+``--backend array`` (default) packs records into RecordBatches and
+partitions with the Pallas bucket-partition kernel; ``--backend bytes``
+is the per-record Python reference path. Both produce the same output.
 """
+import argparse
 import tempfile
 
 import numpy as np
 
-from repro.core import SphereEngine, SphereJob, SphereStage
-from repro.core.shuffle import range_partitioner, sample_boundaries
+from repro.core import SphereEngine, SphereJob
+from repro.core.shuffle import sample_boundaries, terasort_stages
 from repro.sector import ChunkServer, SectorClient, SectorMaster
 
 RECORD, KEY, N = 100, 10, 20_000
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--backend", choices=("array", "bytes"), default="array")
+backend = ap.parse_args().backend
 
 rng = np.random.default_rng(0)
 payload = b"".join(rng.bytes(KEY) + b"v" * (RECORD - KEY) for _ in range(N))
@@ -24,14 +33,14 @@ master.acl.grant_write("u")
 client = SectorClient(master, "u", "chicago")
 client.upload("tera", payload, replication=3)
 
-# sample splitters, then: partition stage (shuffle) -> sort stage
+# sample splitters, then: partition stage (shuffle) -> sort stage.
+# 4-byte splitters keep the bytes comparison and the kernel's uint32
+# comparison in exact agreement (see core/shuffle.py).
 sample = [payload[i:i + RECORD] for i in range(0, 500 * RECORD, RECORD)]
-bounds = sample_boundaries(sample, 6, key_bytes=KEY)
-job = SphereJob("terasort", "tera", [
-    SphereStage("partition", lambda rs: list(rs),
-                partitioner=range_partitioner(bounds), n_buckets=6),
-    SphereStage("sort", lambda rs: sorted(rs, key=lambda r: r[:KEY])),
-], record_size=RECORD)
+bounds = sample_boundaries(sample, 6, key_bytes=4)
+job = SphereJob("terasort", "tera",
+                terasort_stages(bounds, backend, 6, key_bytes=KEY),
+                record_size=RECORD, backend=backend)
 
 outputs, rep = SphereEngine(master, client).run(job)
 
@@ -46,6 +55,8 @@ for blob in outputs:
         prev_last = recs[-1][:KEY]
     total += len(recs)
 assert total == N
-print(f"sorted {N} records across {len(outputs)} buckets: OK")
+print(f"[{backend} backend] sorted {N} records across "
+      f"{len(outputs)} buckets: OK")
 print(f"tasks={rep.tasks} locality={rep.locality_fraction:.0%} "
-      f"bytes_moved={rep.bytes_moved} sim_time={rep.sim_seconds:.2f}s")
+      f"bytes_moved={rep.bytes_moved} sim_time={rep.sim_seconds:.2f}s "
+      f"partition={rep.partitioned_records / max(rep.partition_seconds, 1e-9):,.0f} rec/s")

@@ -28,17 +28,26 @@ scheduling properties (locality fraction, speculation wins, retry counts).
 """
 from __future__ import annotations
 
-import heapq
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.job import SphereJob, SphereStage
+from repro.core.records import RecordBatch, scatter_by_ids
+from repro.core.shuffle import partition_batch
 from repro.sector.client import SectorClient
 from repro.sector.master import SectorMaster
 from repro.sector.server import ServerDown
 from repro.sector.transport import simulate_transfer
 
 PROCESS_RATE = 400e6  # bytes/s of UDF processing on a speed-1.0 worker
+
+# a worker's partition holds bytes records or RecordBatches, per backend
+Record = Union[bytes, RecordBatch]
+
+
+def _rec_nbytes(rec: Record) -> int:
+    return rec.nbytes if isinstance(rec, RecordBatch) else len(rec)
 
 
 @dataclass
@@ -52,6 +61,11 @@ class SphereReport:
     retried: int = 0
     locality_fraction: float = 1.0
     stage_seconds: List[float] = field(default_factory=list)
+    # REAL wall-clock spent computing bucket assignments + scattering
+    # records in shuffles (everything else above is simulated time) —
+    # the bytes-vs-array backend comparison the benchmarks report.
+    partition_seconds: float = 0.0
+    partitioned_records: int = 0
 
 
 class SphereEngine:
@@ -103,7 +117,7 @@ class SphereEngine:
             tasks.append((m.chunk_id, m.size, locs))
 
         # records partitioned per worker across stages
-        parts: Dict[str, List[bytes]] = {w: [] for w in workers}
+        parts: Dict[str, List[Record]] = {w: [] for w in workers}
         first = True
         for stage in job.stages:
             t_stage = self._run_stage(job, stage, tasks, parts, rep,
@@ -112,13 +126,17 @@ class SphereEngine:
             rep.sim_seconds += t_stage
             first = False
             # next stage's tasks are the current partitions (local to owner)
-            tasks = [(w, sum(len(r) for r in parts[w]), [w])
+            tasks = [(w, sum(_rec_nbytes(r) for r in parts[w]), [w])
                      for w in workers if parts[w]]
 
         moved_total = rep.bytes_moved + rep.bytes_local
         rep.locality_fraction = (rep.bytes_local / moved_total
                                  if moved_total else 1.0)
-        outputs = [b"".join(parts[w]) for w in workers if parts[w]]
+        if job.backend == "array":
+            outputs = [b"".join(p.to_bytes() for p in parts[w])
+                       for w in workers if parts[w]]
+        else:
+            outputs = [b"".join(parts[w]) for w in workers if parts[w]]
         return outputs, rep
 
     # ---------------------------------------------------------- one stage
@@ -175,27 +193,37 @@ class SphereEngine:
             executor[key] = best_w
 
         # --- execute UDFs for real (with failure retries) ------------------
-        out_records: Dict[str, List[bytes]] = {w: [] for w in workers}
+        array = job.backend == "array"
+        out_records: Dict[str, List[Record]] = {w: [] for w in workers}
         for key, w, nbytes, locs, _ in assignments:
             w = executor[key]
             blob = self._fetch(job, key, locs, rep, first_stage, parts)
             if blob is None:
                 continue
-            records = job.split_records(blob) if first_stage else blob
-            out_records[w].extend(stage.udf(records))
+            if array:
+                if first_stage:
+                    batch = job.split_batch(blob)
+                else:
+                    batch = RecordBatch.concat(blob)
+                out_records[w].append(stage.apply_batch(batch))
+            else:
+                records = job.split_records(blob) if first_stage else blob
+                out_records[w].extend(stage.apply_bytes(records))
 
         # --- shuffle (if the stage has a partitioner) -----------------------
         if stage.partitioner is not None:
             n = stage.n_buckets or len(workers)
-            buckets: List[List[bytes]] = [[] for _ in range(n)]
-            for w in workers:
-                for r in out_records[w]:
-                    buckets[stage.partitioner(r, n)].append(r)
+            if array:
+                buckets = self._bucketize_array(stage, out_records, workers,
+                                                n, rep)
+            else:
+                buckets = self._bucketize_bytes(stage, out_records, workers,
+                                                n, rep)
             # bucket i lives on worker i % len(workers); charge movement
             shuffle_time = 0.0
             for i, bucket in enumerate(buckets):
                 dst = workers[i % len(workers)]
-                nbytes = sum(len(r) for r in bucket)
+                nbytes = sum(_rec_nbytes(r) for r in bucket)
                 # half the records on average originate elsewhere
                 src = workers[(i + 1) % len(workers)]
                 if nbytes:
@@ -211,6 +239,38 @@ class SphereEngine:
         for w in workers:
             parts[w] = out_records[w]
         return max(final.values()) if final else 0.0
+
+    # ---------------------------------------------------------- bucketize
+    def _bucketize_bytes(self, stage: SphereStage, out_records, workers,
+                         n: int, rep: SphereReport) -> List[List[bytes]]:
+        """Reference shuffle: one partitioner call per Python record."""
+        buckets: List[List[bytes]] = [[] for _ in range(n)]
+        t0 = time.perf_counter()
+        for w in workers:
+            for r in out_records[w]:
+                buckets[stage.partitioner(r, n)].append(r)
+                rep.partitioned_records += 1
+        rep.partition_seconds += time.perf_counter() - t0
+        return buckets
+
+    def _bucketize_array(self, stage: SphereStage, out_records, workers,
+                         n: int, rep: SphereReport
+                         ) -> List[List[RecordBatch]]:
+        """Array shuffle: per worker, one Pallas bucket-partition kernel
+        call (ids + histogram) and one argsort/segment gather."""
+        buckets: List[List[RecordBatch]] = [[] for _ in range(n)]
+        t0 = time.perf_counter()
+        for w in workers:
+            if not out_records[w]:
+                continue
+            batch = RecordBatch.concat(out_records[w])
+            ids, hist = partition_batch(batch, stage.partitioner, n)
+            for i, piece in enumerate(scatter_by_ids(batch, ids, hist)):
+                if piece.num_records:
+                    buckets[i].append(piece)
+            rep.partitioned_records += batch.num_records
+        rep.partition_seconds += time.perf_counter() - t0
+        return buckets
 
     # ------------------------------------------------------------- fetch
     def _fetch(self, job, key, locs, rep, first_stage, parts):

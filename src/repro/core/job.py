@@ -6,24 +6,62 @@ chunks already distributed by Sector; ``sphere.run(data, process)`` applies
 data is shuffled as required. Unlike MapReduce, *both* positions are
 arbitrary UDFs — a stage is any record->records function, optionally
 followed by a partitioner that reshuffles records across buckets.
+
+Two record backends:
+
+* ``backend="bytes"`` (reference): records are Python ``bytes``; a stage's
+  ``udf`` maps a list of records to a list of records and the shuffle
+  calls the partitioner once per record.
+* ``backend="array"``: records are packed into :class:`RecordBatch`
+  arrays; a stage's ``batch_udf`` is a (typically jitted) ``RecordBatch ->
+  RecordBatch`` function and the shuffle runs the Pallas bucket-partition
+  kernel + one argsort/gather per worker batch.  Requires a fixed
+  ``record_size``.  A stage with only a bytes ``udf`` still works on the
+  array backend through a decode/re-encode compatibility path.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence
+
+from repro.core.records import RecordBatch
 
 # A UDF maps a list of records (bytes each) to a list of records.
 UDF = Callable[[Sequence[bytes]], List[bytes]]
+# A batch UDF maps a RecordBatch to a RecordBatch (array backend).
+BatchUDF = Callable[[RecordBatch], RecordBatch]
 # A partitioner maps one record to a bucket index in [0, n_buckets).
 Partitioner = Callable[[bytes, int], int]
+
+BACKENDS = ("bytes", "array")
 
 
 @dataclass
 class SphereStage:
     name: str
-    udf: UDF
+    udf: Optional[UDF] = None
     partitioner: Optional[Partitioner] = None  # None = no shuffle after
     n_buckets: int = 0                         # 0 = same as worker count
+    batch_udf: Optional[BatchUDF] = None       # array-backend stage body
+
+    def apply_bytes(self, records: Sequence[bytes]) -> List[bytes]:
+        if self.udf is None:
+            raise ValueError(f"stage {self.name!r} has no bytes udf "
+                             f"(backend='bytes' needs one)")
+        return self.udf(records)
+
+    def apply_batch(self, batch: RecordBatch) -> RecordBatch:
+        if self.batch_udf is not None:
+            out = self.batch_udf(batch)
+            if not isinstance(out, RecordBatch):
+                raise TypeError(f"stage {self.name!r} batch_udf must return "
+                                f"a RecordBatch, got {type(out).__name__}")
+            return out
+        # compatibility: run the bytes udf over the unpacked batch
+        out_records = self.apply_bytes(batch.to_records())
+        if not out_records:
+            return RecordBatch.empty(batch.record_size)
+        return RecordBatch.from_records(out_records)
 
 
 @dataclass
@@ -32,9 +70,21 @@ class SphereJob:
     input_file: str
     stages: List[SphereStage]
     record_size: int = 0   # fixed-size records; 0 = whole chunk is 1 record
+    backend: str = "bytes"
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"choose from {BACKENDS}")
+        if self.backend == "array" and self.record_size <= 0:
+            raise ValueError("backend='array' requires a fixed "
+                             "record_size > 0")
 
     def split_records(self, blob: bytes) -> List[bytes]:
         if not self.record_size:
             return [blob]
         rs = self.record_size
         return [blob[i:i + rs] for i in range(0, len(blob) - rs + 1, rs)]
+
+    def split_batch(self, blob: bytes) -> RecordBatch:
+        return RecordBatch.from_bytes(blob, self.record_size)

@@ -32,6 +32,7 @@ except ImportError:  # pragma: no cover
 
 from repro.core.engine import SphereEngine, SphereReport
 from repro.core.job import SphereJob, SphereStage
+from repro.core.records import RecordBatch
 
 
 # --------------------------- record codecs ---------------------------------
@@ -62,10 +63,33 @@ def _decode_partial(blob: bytes) -> Tuple[np.ndarray, np.ndarray]:
 
 # --------------------------- Sphere job ------------------------------------
 
+@jax.jit
+def _assign_partial_batch(data_u8: jax.Array, c: jax.Array) -> jax.Array:
+    """Array-backend assign UDF body: uint8 records [n, 4*dim] + centroids
+    [k, dim] -> one partial record [1, 4*k*(dim+1)] holding float32
+    (per-centroid sums ++ counts)."""
+    n = data_u8.shape[0]
+    pts = jax.lax.bitcast_convert_type(data_u8.reshape(n, -1, 4),
+                                       jnp.float32)          # [n, dim]
+    d2 = (jnp.sum(pts**2, 1)[:, None] - 2 * pts @ c.T
+          + jnp.sum(c**2, 1)[None])
+    a = jnp.argmin(d2, 1)
+    oh = jax.nn.one_hot(a, c.shape[0], dtype=jnp.float32)
+    sums = oh.T @ pts                                        # [k, dim]
+    counts = oh.sum(0)                                       # [k]
+    row = jnp.concatenate([sums, counts[:, None]], axis=1)[None]
+    return jax.lax.bitcast_convert_type(row, jnp.uint8).reshape(1, -1)
+
+
 def kmeans_sphere(engine: SphereEngine, file: str, dim: int, k: int,
-                  iters: int, seed: int = 0
+                  iters: int, seed: int = 0, backend: str = "bytes"
                   ) -> Tuple[np.ndarray, SphereReport]:
-    """Run k-means over a Sector file of float32 points via Sphere."""
+    """Run k-means over a Sector file of float32 points via Sphere.
+
+    ``backend="bytes"`` treats each chunk as one record and loops in
+    numpy; ``backend="array"`` packs points into a :class:`RecordBatch`
+    and runs the jitted assign UDF per chunk batch.
+    """
     rng = np.random.default_rng(seed)
     centroids = rng.normal(size=(k, dim)).astype(np.float32)
     report = SphereReport()
@@ -86,15 +110,32 @@ def kmeans_sphere(engine: SphereEngine, file: str, dim: int, k: int,
                 out.append(_encode_partial(sums, counts))
             return out
 
-        job = SphereJob(
-            name="kmeans-assign", input_file=file,
-            stages=[SphereStage("assign", assign_udf,
-                                partitioner=lambda r, n: 0)],  # reduce to 0
-            record_size=0)
+        if backend == "array":
+            c_dev = jnp.asarray(c)
+
+            def assign_batch(batch: RecordBatch) -> RecordBatch:
+                return RecordBatch(_assign_partial_batch(batch.data, c_dev))
+
+            job = SphereJob(
+                name="kmeans-assign", input_file=file,
+                stages=[SphereStage("assign", batch_udf=assign_batch,
+                                    partitioner=lambda r, n: 0)],
+                record_size=4 * dim, backend="array")
+        else:
+            job = SphereJob(
+                name="kmeans-assign", input_file=file,
+                stages=[SphereStage("assign", assign_udf,
+                                    partitioner=lambda r, n: 0)],  # reduce
+                record_size=0)
         outputs, report = engine.run(job, report)
         sums = np.zeros((k, dim))
-        counts = np.zeros(k, np.int64)
+        counts = np.zeros(k, np.float64)
         for blob in outputs:
+            if backend == "array":
+                arr = np.frombuffer(blob, "<f4").reshape(-1, k, dim + 1)
+                sums += arr[..., :dim].sum(0)
+                counts += arr[..., dim].sum(0)
+                continue
             off = 0
             while off < len(blob):
                 kk, dd = struct.unpack("<II", blob[off:off + 8])

@@ -1,22 +1,95 @@
-"""Partitioners for the Sphere shuffle."""
+"""Partitioners for the Sphere shuffle — bytes reference + array backend.
+
+Each partitioner is a callable ``(record: bytes, n: int) -> int`` (the
+bytes reference path, unchanged engine protocol) and additionally exposes
+``bucket_ids(batch, n)`` which computes the same assignment for a whole
+``RecordBatch`` in one shot via the Pallas ``bucket_partition`` kernel
+(ids + histogram).  The kernel's rule is ``bucket = #{i : bounds[i] <
+key}``; both partitioners phrase their bytes-side decision with exactly
+that rule so the two paths agree record-for-record:
+
+* ``HashPartitioner`` hashes the key prefix with FNV-1a 32-bit (scalar
+  and vectorised twins in :mod:`repro.core.records`) and buckets the
+  hash against ``uniform_hash_bounds``.
+* ``RangePartitioner`` keeps the classic TeraSort binary search over
+  sampled boundaries.  Its array path compares big-endian uint32 views
+  of the first 4 key bytes, which matches the bytes comparison whenever
+  boundaries are at most 4 bytes (use ``sample_boundaries(...,
+  key_bytes=4)`` when targeting the array backend).
+"""
 from __future__ import annotations
 
-import hashlib
-from typing import Callable, List, Sequence
+from bisect import bisect_left
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.records import (RecordBatch, fnv1a32, scatter_by_ids,
+                                uniform_hash_bounds)
+from repro.kernels.bucket_partition import bucket_partition
 
 
-def hash_partitioner(key_bytes: int = 8) -> Callable[[bytes, int], int]:
-    def part(record: bytes, n: int) -> int:
-        h = hashlib.md5(record[:key_bytes]).digest()
-        return int.from_bytes(h[:4], "big") % n
-    return part
+def _kernel_partition(keys: jax.Array, bounds_u32: np.ndarray, n: int,
+                      *, block_n: int = 1 << 20,
+                      interpret: bool | None = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """bucket_partition over uint32 keys with degenerate-shape handling.
+
+    The Pallas kernel needs at least one boundary; n == 1 (or an empty
+    boundary list) means every record lands in bucket 0.  When there are
+    more boundaries than n - 1 the tail buckets are clamped onto n - 1,
+    mirroring the ``min(lo, n - 1)`` in the bytes reference.
+    """
+    nrec = keys.shape[0]
+    if nrec == 0 or n <= 1 or len(bounds_u32) == 0:
+        ids = jnp.zeros((nrec,), jnp.int32)
+        hist = jnp.zeros((max(n, 1),), jnp.int32).at[0].set(nrec)
+        return ids, hist
+    nb = len(bounds_u32) + 1
+    ids, hist = bucket_partition(keys, jnp.asarray(bounds_u32), n_buckets=nb,
+                                 block_n=min(block_n, nrec),
+                                 interpret=interpret)
+    if nb > n:  # clamp overflow buckets, fold their histogram tail
+        ids = jnp.minimum(ids, n - 1)
+        hist = hist[:n].at[n - 1].add(hist[n:].sum())
+    return ids, hist
 
 
-def range_partitioner(boundaries: Sequence[bytes]) -> Callable[[bytes, int], int]:
+class HashPartitioner:
+    """FNV-1a hash of the first ``key_bytes`` bytes -> uniform bucket."""
+
+    def __init__(self, key_bytes: int = 8):
+        self.key_bytes = key_bytes
+        self._bounds: Dict[int, List[int]] = {}
+
+    def _bounds_for(self, n: int) -> List[int]:
+        if n not in self._bounds:
+            self._bounds[n] = uniform_hash_bounds(n).tolist()
+        return self._bounds[n]
+
+    def __call__(self, record: bytes, n: int) -> int:
+        h = fnv1a32(record[:self.key_bytes])
+        return bisect_left(self._bounds_for(n), h)
+
+    def bucket_ids(self, batch: RecordBatch, n: int, *,
+                   block_n: int = 1 << 20, interpret: bool | None = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+        keys = batch.hash_keys_u32(self.key_bytes)
+        return _kernel_partition(keys, uniform_hash_bounds(n), n,
+                                 block_n=block_n, interpret=interpret)
+
+
+class RangePartitioner:
     """TeraSort-style: bucket by key position among sorted boundaries."""
-    bnd = list(boundaries)
 
-    def part(record: bytes, n: int) -> int:
+    def __init__(self, boundaries: Sequence[bytes]):
+        self.bnd = list(boundaries)
+
+    def __call__(self, record: bytes, n: int) -> int:
+        bnd = self.bnd
         key = record[:len(bnd[0])] if bnd else record
         lo, hi = 0, len(bnd)
         while lo < hi:
@@ -26,12 +99,98 @@ def range_partitioner(boundaries: Sequence[bytes]) -> Callable[[bytes, int], int
             else:
                 hi = mid
         return min(lo, n - 1)
-    return part
+
+    def bounds_u32(self) -> np.ndarray:
+        """Boundaries as big-endian uint32 of their first 4 bytes."""
+        return np.array([int.from_bytes(b[:4].ljust(4, b"\0"), "big")
+                         for b in self.bnd], dtype=np.uint32)
+
+    def bucket_ids(self, batch: RecordBatch, n: int, *,
+                   block_n: int = 1 << 20, interpret: bool | None = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+        # The kernel compares uint32 views of 4-byte key prefixes, which
+        # only matches the bytes path when boundaries fit in 4 bytes
+        # (sample_boundaries(..., key_bytes=4)).  Longer boundaries take
+        # the per-record host loop so the assignment never silently
+        # diverges from the reference.
+        if self.bnd and len(self.bnd[0]) > 4:
+            return _host_partition(batch, self, n)
+        kb = min(len(self.bnd[0]), 4) if self.bnd else 4
+        return _kernel_partition(batch.keys_u32(kb), self.bounds_u32(), n,
+                                 block_n=block_n, interpret=interpret)
+
+
+def hash_partitioner(key_bytes: int = 8) -> HashPartitioner:
+    return HashPartitioner(key_bytes)
+
+
+def range_partitioner(boundaries: Sequence[bytes]) -> RangePartitioner:
+    return RangePartitioner(boundaries)
+
+
+def _host_partition(batch: RecordBatch, partitioner, n: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Per-record host loop — the correctness fallback for partitioners
+    the kernel cannot express."""
+    ids_np = np.fromiter((partitioner(r, n) for r in batch.to_records()),
+                         np.int32, count=batch.num_records)
+    hist = np.bincount(ids_np, minlength=n).astype(np.int32)
+    return jnp.asarray(ids_np), jnp.asarray(hist)
+
+
+def partition_batch(batch: RecordBatch, partitioner, n: int, *,
+                    block_n: int = 1 << 20, interpret: bool | None = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """(ids, hist) for a batch under any engine partitioner.
+
+    Array-aware partitioners go through the Pallas kernel; arbitrary
+    ``(record, n) -> int`` callables fall back to a per-record host loop
+    so the array backend stays correct for custom partitioners.
+    """
+    if hasattr(partitioner, "bucket_ids"):
+        return partitioner.bucket_ids(batch, n, block_n=block_n,
+                                      interpret=interpret)
+    return _host_partition(batch, partitioner, n)
+
+
+def shuffle_batch(batch: RecordBatch, partitioner, n: int, *,
+                  block_n: int = 1 << 20, interpret: bool | None = None
+                  ) -> List[RecordBatch]:
+    """Partition + scatter: one kernel call, one argsort, n gathers."""
+    ids, hist = partition_batch(batch, partitioner, n, block_n=block_n,
+                                interpret=interpret)
+    return scatter_by_ids(batch, ids, hist)
+
+
+def terasort_stages(bounds: Sequence[bytes], backend: str, n_buckets: int,
+                    key_bytes: int = 10) -> list:
+    """The canonical TeraSort stage pair (partition+shuffle, then sort)
+    on either record backend — shared by benchmarks, examples and tests
+    so the two paths always run the same job shape."""
+    from repro.core.job import SphereStage
+    part = range_partitioner(bounds)
+    if backend == "array":
+        return [
+            SphereStage("partition", batch_udf=lambda b: b,
+                        partitioner=part, n_buckets=n_buckets),
+            SphereStage("sort",
+                        batch_udf=lambda b: b.sort_by_key(key_bytes)),
+        ]
+    return [
+        SphereStage("partition", lambda rs: list(rs),
+                    partitioner=part, n_buckets=n_buckets),
+        SphereStage("sort",
+                    lambda rs: sorted(rs, key=lambda r: r[:key_bytes])),
+    ]
 
 
 def sample_boundaries(records: Sequence[bytes], n_buckets: int,
                       key_bytes: int = 10) -> List[bytes]:
-    """Sample keys to build balanced range boundaries (TeraSort pre-pass)."""
+    """Sample keys to build balanced range boundaries (TeraSort pre-pass).
+
+    Use ``key_bytes=4`` (or fewer) when the job will run on the array
+    backend: 4-byte boundaries make the kernel's uint32 comparison exact.
+    """
     keys = sorted(r[:key_bytes] for r in records)
     if not keys or n_buckets <= 1:
         return []

@@ -8,26 +8,31 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across jax versions: AxisType.Auto where it exists
+    (jax >= 0.5), plain make_mesh otherwise."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod mesh, or 2x16x16 across two pods (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh_compat(shape, axes)
 
 
 def make_debug_mesh(*, multi_pod: bool = False):
     """Same axis names over however many devices exist (CPU tests)."""
     n = jax.device_count()
     if multi_pod:
-        return jax.make_mesh((1, n, 1), ("pod", "data", "model"),
-                             axis_types=_auto(3))
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+        return make_mesh_compat((1, n, 1), ("pod", "data", "model"))
+    return make_mesh_compat((n, 1), ("data", "model"))
 
 
 def make_flat_mesh(axis: str = "data"):
     """1-D mesh over all devices (Sphere SPMD jobs, sort benchmarks)."""
-    return jax.make_mesh((jax.device_count(),), (axis,), axis_types=_auto(1))
+    return make_mesh_compat((jax.device_count(),), (axis,))

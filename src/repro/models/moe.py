@@ -27,11 +27,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models.common import activation, sds
 from repro.parallel.sharding import ParallelConfig, constrain
-
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.utils.jax_compat import shard_map_partial
 
 CAPACITY_FACTOR = 1.25
 GROUP_SIZE = 4096  # tokens per dispatch group (GShard-style)
@@ -216,12 +212,12 @@ def _apply_a2a(params, x, *, cfg: ModelConfig, pcfg: ParallelConfig):
 
     manual = frozenset(a for a in axes if a in pcfg.axis_sizes) | {"model"}
     b_entry = axes if len(axes) > 1 else axes[0]
-    fn = _shard_map(
+    fn = shard_map_partial(
         body, mesh=pcfg.mesh,
         in_specs=(P(), P("model", None, None), P("model", None, None),
                   P("model", None, None), P(b_entry, None)),
         out_specs=(P(b_entry, None, None), P(b_entry, None, None)),
-        check_vma=False, axis_names=manual)
+        manual_axes=manual)
     xt = x.reshape(n_total, d)
     out, aux_parts = fn(params["router"], params["wg"], params["wi"],
                         params["wo"], xt)

@@ -314,12 +314,10 @@ def _vocab_parallel_embed(params, tokens, *, cfg: ModelConfig,
     combines. Avoids XLA's 'involuntary full rematerialization' of the
     [B,T,D] gather when the table is vocab-sharded (a §Perf memory/
     collective iteration)."""
-    try:
-        from jax import shard_map as _shard_map
-    except ImportError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map as _shard_map
     from jax import lax
     from jax.sharding import PartitionSpec as P
+
+    from repro.utils.jax_compat import shard_map_partial
 
     w = params["embed"]["w"]
     vp = w.shape[0]
@@ -334,10 +332,9 @@ def _vocab_parallel_embed(params, tokens, *, cfg: ModelConfig,
         out = jnp.where(ok[..., None], out, 0).astype(cfg.compute_dtype)
         return lax.psum(out, "model")
 
-    fn = _shard_map(body, mesh=pcfg.mesh,
-                    in_specs=(P("model", None), P()),
-                    out_specs=P(), check_vma=False,
-                    axis_names=frozenset({"model"}))
+    fn = shard_map_partial(body, mesh=pcfg.mesh,
+                           in_specs=(P("model", None), P()),
+                           out_specs=P(), manual_axes={"model"})
     return fn(w, tokens)
 
 

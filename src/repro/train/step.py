@@ -29,12 +29,8 @@ from repro.parallel import collectives
 from repro.parallel.sharding import (ParallelConfig, batch_spec,
                                      kv_cache_spec, param_specs_for)
 from repro.train import optim
+from repro.utils.jax_compat import shard_map_partial
 from repro.utils.pytree import tree_map_with_path
-
-try:
-    from jax import shard_map as _shard_map  # jax >= 0.6
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -205,11 +201,10 @@ def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig,
         out_specs = (rep, dict(opt_in), jax.tree.map(lambda _: P(),
                      {"nll": 0, "z_loss": 0, "accuracy": 0, "tokens": 0,
                       "aux_loss": 0, "grad_norm": 0, "lr": 0, "loss": 0}))
-        fn = _shard_map(pod_body, mesh=pcfg.mesh,
-                        in_specs=(rep, opt_in, batch_in),
-                        out_specs=out_specs,
-                        check_vma=False,
-                        axis_names=frozenset({"pod"}))  # manual over pod only
+        fn = shard_map_partial(pod_body, mesh=pcfg.mesh,
+                               in_specs=(rep, opt_in, batch_in),
+                               out_specs=out_specs,
+                               manual_axes={"pod"})  # manual over pod only
         return fn(params, opt_state, batch)
 
     return step

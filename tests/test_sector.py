@@ -1,7 +1,9 @@
 """Sector storage cloud: placement, replication, failures, ACLs, transport."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from conftest import make_cloud
 from repro.sector.acl import AclError

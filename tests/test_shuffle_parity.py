@@ -1,0 +1,197 @@
+"""Array-backend shuffle parity: kernel bucket ids == bytes partitioners.
+
+The array backend is only allowed to exist because it agrees with the
+bytes reference record-for-record. These tests drive both paths over the
+same records — including the Pallas kernel's padded-tail blocks (record
+counts not divisible by block_n) and the degenerate single-bucket case —
+and a hypothesis property test when hypothesis is installed.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.records import RecordBatch, fnv1a32, scatter_by_ids
+from repro.core.shuffle import (hash_partitioner, partition_batch,
+                                range_partitioner, sample_boundaries,
+                                shuffle_batch)
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis is a dev dep; CI installs it
+    hypothesis = None
+
+
+def _random_records(n, rec, seed=0):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 256, size=(n, rec), dtype=np.uint8)
+    blob = data.tobytes()
+    return blob, [blob[i:i + rec] for i in range(0, n * rec, rec)]
+
+
+def _assert_parity(records, blob, rec, part, n, **kw):
+    """Kernel ids/hist must equal the per-record bytes partitioner."""
+    batch = RecordBatch.from_bytes(blob, rec)
+    ids, hist = partition_batch(batch, part, n, **kw)
+    ref = [part(r, n) for r in records]
+    assert np.asarray(ids).tolist() == ref
+    assert np.asarray(hist).tolist() == [ref.count(i) for i in range(n)]
+    # and the scattered buckets preserve the bytes backend's append order
+    for i, piece in enumerate(scatter_by_ids(batch, ids, hist)):
+        want = b"".join(r for r, b in zip(records, ref) if b == i)
+        assert piece.to_bytes() == want
+
+
+@pytest.mark.parametrize("n_buckets", [1, 2, 5, 16])
+@pytest.mark.parametrize("n_records,record_size", [
+    (1, 8), (97, 100), (256, 12), (1000, 100)])
+def test_hash_partitioner_parity(n_records, record_size, n_buckets):
+    blob, records = _random_records(n_records, record_size,
+                                    seed=n_records + n_buckets)
+    part = hash_partitioner(key_bytes=8)
+    _assert_parity(records, blob, record_size, part, n_buckets)
+
+
+@pytest.mark.parametrize("n_buckets", [1, 2, 6, 16])
+@pytest.mark.parametrize("n_records,record_size", [
+    (1, 8), (97, 100), (333, 10), (1000, 100)])
+def test_range_partitioner_parity(n_records, record_size, n_buckets):
+    blob, records = _random_records(n_records, record_size,
+                                    seed=7 * n_records + n_buckets)
+    bounds = sample_boundaries(records[:200], n_buckets, key_bytes=4)
+    part = range_partitioner(bounds)
+    _assert_parity(records, blob, record_size, part, n_buckets)
+
+
+def test_padded_tail_blocks():
+    """block_n that does not divide n_records forces the kernel's padded
+    tail path: padded ids must not leak into ids or the histogram."""
+    n, rec, nb = 101, 16, 4
+    blob, records = _random_records(n, rec, seed=3)
+    part = hash_partitioner(key_bytes=4)
+    for block_n in (7, 32, 100, 101, 4096):
+        _assert_parity(records, blob, rec, part, nb, block_n=block_n)
+
+
+def test_single_bucket_short_circuits():
+    blob, records = _random_records(50, 10, seed=5)
+    batch = RecordBatch.from_bytes(blob, 10)
+    for part in (hash_partitioner(4), range_partitioner([])):
+        ids, hist = partition_batch(batch, part, 1)
+        assert np.asarray(ids).tolist() == [0] * 50
+        assert np.asarray(hist).tolist() == [50]
+
+
+def test_duplicate_and_boundary_keys():
+    """Records exactly equal to a boundary, plus heavy duplicates — the
+    strict #{bounds < key} rule must agree on both paths."""
+    bounds = [b"\x40\x00\x00\x00", b"\x80\x00\x00\x00"]
+    part = range_partitioner(bounds)
+    keys = ([b"\x40\x00\x00\x00"] * 5 + [b"\x3f\xff\xff\xff"] * 3
+            + [b"\x80\x00\x00\x00"] * 4 + [b"\x80\x00\x00\x01"] * 2
+            + [b"\x00\x00\x00\x00"] * 2 + [b"\xff\xff\xff\xff"] * 2)
+    records = [k + b"pad-data" for k in keys]
+    blob = b"".join(records)
+    _assert_parity(records, blob, 12, part, 3)
+
+
+def test_custom_callable_partitioner_fallback():
+    """Arbitrary Python partitioners still work on the array backend via
+    the host loop fallback of partition_batch."""
+    blob, records = _random_records(40, 8, seed=9)
+    part = (lambda r, n: r[0] % n)
+    batch = RecordBatch.from_bytes(blob, 8)
+    ids, hist = partition_batch(batch, part, 3)
+    ref = [r[0] % 3 for r in records]
+    assert np.asarray(ids).tolist() == ref
+    pieces = shuffle_batch(batch, part, 3)
+    assert [p.num_records for p in pieces] == [ref.count(i) for i in range(3)]
+
+
+def test_fnv1a32_vector_matches_scalar():
+    blob, records = _random_records(64, 20, seed=11)
+    batch = RecordBatch.from_bytes(blob, 20)
+    for kb in (1, 4, 8, 20):
+        got = np.asarray(batch.hash_keys_u32(kb)).tolist()
+        assert got == [fnv1a32(r[:kb]) for r in records]
+
+
+def test_sort_by_key_matches_python_sorted():
+    blob, records = _random_records(200, 24, seed=13)
+    batch = RecordBatch.from_bytes(blob, 24)
+    for kb in (4, 10):
+        got = batch.sort_by_key(kb).to_records()
+        assert got == sorted(records, key=lambda r: r[:kb])
+
+
+def test_sort_by_key_stable_ignores_payload():
+    """Duplicate keys with differing payloads: payload bytes past
+    key_bytes must not enter the sort key — ties keep input order, like
+    the bytes backend's stable sorted(key=r[:kb])."""
+    records = [b"KEY0000000" + p for p in (b"zz", b"aa", b"mm")]
+    records += [b"KEY0000001" + p for p in (b"bb", b"aa")]
+    records = records[::-1]  # keys out of order, payloads shuffled
+    batch = RecordBatch.from_records(records)
+    for kb in (10, 7):  # 10 = pad-to-12 tail word; 7 = pad-to-8
+        got = batch.sort_by_key(kb).to_records()
+        assert got == sorted(records, key=lambda r: r[:kb])
+
+
+def test_long_boundaries_fall_back_to_host_loop():
+    """Boundaries longer than 4 bytes can't use the uint32 kernel
+    compare — bucket_ids must still match the bytes path exactly
+    (records sharing a 4-byte prefix, differing past it)."""
+    prefix = b"\x10\x20\x30\x40"
+    records = [prefix + bytes([i]) + b"x" * 5 for i in range(20)]
+    blob = b"".join(records)
+    bounds = sample_boundaries(records, 4, key_bytes=10)
+    assert len(bounds[0]) > 4  # the case the kernel cannot express
+    part = range_partitioner(bounds)
+    _assert_parity(records, blob, 10, part, 4)
+    # the bytes path spreads these across buckets; a 4-byte-truncating
+    # kernel would have collapsed them all into bucket 0
+    assert len({part(r, 4) for r in records}) > 1
+
+
+def test_record_batch_roundtrip():
+    blob, records = _random_records(33, 7, seed=17)
+    batch = RecordBatch.from_bytes(blob, 7)
+    assert batch.num_records == 33 and batch.record_size == 7
+    assert batch.to_bytes() == blob
+    assert batch.to_records() == records
+    assert RecordBatch.from_records(records).to_bytes() == blob
+    both = RecordBatch.concat([batch, batch])
+    assert both.to_bytes() == blob + blob
+    with pytest.raises(ValueError):
+        RecordBatch.from_bytes(blob[:-1], 7)
+    with pytest.raises(ValueError):
+        RecordBatch.from_records([b"ab", b"abc"])
+
+
+def test_points_roundtrip():
+    pts = np.random.default_rng(19).normal(size=(40, 6)).astype(np.float32)
+    batch = RecordBatch.from_points(jnp.asarray(pts))
+    assert batch.record_size == 24
+    np.testing.assert_array_equal(np.asarray(batch.to_points(6)), pts)
+
+
+if hypothesis is not None:
+    @settings(max_examples=40, deadline=None)
+    @given(data=st.binary(min_size=0, max_size=400),
+           rec_pow=st.integers(2, 5),
+           n_buckets=st.integers(1, 9),
+           which=st.sampled_from(["hash", "range"]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_parity_property(data, rec_pow, n_buckets, which, seed):
+        rec = 1 << rec_pow
+        n = max(1, len(data) // rec)
+        blob = (data + bytes(n * rec))[:n * rec]
+        records = [blob[i:i + rec] for i in range(0, n * rec, rec)]
+        if which == "hash":
+            part = hash_partitioner(key_bytes=min(rec, 8))
+        else:
+            rng = np.random.default_rng(seed)
+            raw = [rng.bytes(4) for _ in range(max(n_buckets - 1, 0))]
+            part = range_partitioner(sorted(raw))
+        _assert_parity(records, blob, rec, part, n_buckets, block_n=37)

@@ -5,7 +5,8 @@ import pytest
 from conftest import make_cloud
 from repro.core import SphereEngine, SphereJob, SphereStage, hash_partitioner
 from repro.core.kmeans import encode_points, kmeans_sphere
-from repro.core.shuffle import range_partitioner, sample_boundaries
+from repro.core.shuffle import (range_partitioner, sample_boundaries,
+                                terasort_stages)
 
 
 def _upload_records(client, name, n=64, rec=100, seed=0, replication=2):
@@ -95,7 +96,8 @@ def test_two_stage_shuffle_wordcount_style(tmp_path):
     assert counts == want
 
 
-def test_kmeans_converges(tmp_path):
+@pytest.mark.parametrize("backend", ["bytes", "array"])
+def test_kmeans_converges(tmp_path, backend):
     master, servers, client = make_cloud(tmp_path, chunk_size=4096)
     rng = np.random.default_rng(0)
     true_c = np.array([[0, 0], [8, 8]], np.float32)
@@ -103,7 +105,7 @@ def test_kmeans_converges(tmp_path):
         .astype(np.float32)
     client.upload("pts", encode_points(pts), replication=2)
     cents, rep = kmeans_sphere(SphereEngine(master, client), "pts",
-                               dim=2, k=2, iters=6)
+                               dim=2, k=2, iters=6, backend=backend)
     cents = cents[np.argsort(cents[:, 0])]
     assert np.abs(cents - true_c).max() < 0.5
     assert rep.locality_fraction > 0.8
@@ -118,3 +120,71 @@ def test_range_partitioner_boundaries():
     assert ids == sorted(ids)
     counts = [ids.count(i) for i in range(4)]
     assert max(counts) - min(counts) <= 30
+
+
+# ------------------------- array record backend ---------------------------
+
+def test_array_backend_terasort_matches_bytes(tmp_path):
+    """Full two-stage sort job: both backends, byte-identical output."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=2000)
+    rec, n = 100, 200
+    data = _upload_records(client, "f", n=n, rec=rec, replication=2)
+    sample = [data[i:i + rec] for i in range(0, n * rec, rec)]
+    bounds = sample_boundaries(sample, 4, key_bytes=4)
+
+    results = {}
+    for backend in ("bytes", "array"):
+        job = SphereJob("sort", "f", terasort_stages(bounds, backend, 4),
+                        record_size=rec, backend=backend)
+        outs, rep = SphereEngine(master, client).run(job)
+        allrec = []
+        for blob in outs:
+            recs = [blob[i:i + rec] for i in range(0, len(blob), rec)]
+            assert recs == sorted(recs, key=lambda r: r[:10])
+            allrec.extend(recs)
+        assert rep.partitioned_records == n
+        results[backend] = allrec
+    assert results["bytes"] == results["array"]
+    keys = [r[:10] for r in results["array"]]
+    assert keys == sorted(keys)  # globally sorted across buckets
+
+
+def test_array_backend_bytes_udf_compat(tmp_path):
+    """A stage with only a bytes udf still runs on the array backend
+    (decode/re-encode path), including empty UDF outputs."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=800)
+    rng = np.random.default_rng(1)
+    vals = rng.integers(0, 8, size=100).astype("<u4")
+    client.upload("nums", vals.tobytes(), replication=2)
+
+    def keep_even(records):
+        return [r for r in records if np.frombuffer(r, "<u4")[0] % 2 == 0]
+
+    job = SphereJob("evens", "nums",
+                    [SphereStage("filter", keep_even)],
+                    record_size=4, backend="array")
+    outs, _ = SphereEngine(master, client).run(job)
+    got = np.sort(np.frombuffer(b"".join(outs), "<u4"))
+    want = np.sort(vals[vals % 2 == 0])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_array_backend_requires_record_size():
+    with pytest.raises(ValueError):
+        SphereJob("bad", "f", [SphereStage("id", lambda rs: rs)],
+                  record_size=0, backend="array")
+    with pytest.raises(ValueError):
+        SphereJob("bad", "f", [SphereStage("id", lambda rs: rs)],
+                  record_size=4, backend="tensor")
+
+
+def test_report_partition_throughput_fields(tmp_path):
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    _upload_records(client, "f", n=100, rec=100)
+    job = SphereJob("shuffled", "f", [
+        SphereStage("id", lambda rs: list(rs),
+                    partitioner=hash_partitioner(8), n_buckets=4)],
+        record_size=100)
+    _, rep = SphereEngine(master, client).run(job)
+    assert rep.partitioned_records == 100
+    assert rep.partition_seconds > 0

@@ -9,16 +9,31 @@ import textwrap
 
 import pytest
 
+from repro.utils import jax_compat
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# version-compat preamble available to every subprocess snippet:
+# mk_mesh(shape, axes) and use_mesh(mesh) work on jax 0.4.x and >= 0.5
+_PREAMBLE = """
+import jax
+from repro.launch.mesh import make_mesh_compat as mk_mesh
+try:
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+def use_mesh(mesh):
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+"""
 
 
 def run_py(code: str, devices: int = 8, timeout: int = 560) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=timeout)
+    out = subprocess.run(
+        [sys.executable, "-c", _PREAMBLE + textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=timeout)
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
 
@@ -41,6 +56,9 @@ def test_distributed_sort_correct():
     assert "OK" in out
 
 
+@pytest.mark.skipif(not jax_compat.PARTIAL_MANUAL_ROBUST,
+                    reason="podwise psum-over-pod inside a partial-manual "
+                           "region is fatal in XLA for jax 0.4.x shard_map")
 def test_podwise_mode_matches_pjit():
     """Manual-pod train step == plain pjit step (no compression)."""
     out = run_py("""
@@ -50,8 +68,7 @@ def test_podwise_mode_matches_pjit():
         from repro.parallel.sharding import ParallelConfig
         from repro.train import optim
         from repro.train.step import make_train_step
-        mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh = mk_mesh((2, 2, 2), ('pod', 'data', 'model'))
         cfg = ARCHS['qwen2.5-3b'].reduced().replace(
             param_dtype='float32', compute_dtype='float32')
         params = model.init_params(cfg, jax.random.PRNGKey(0))
@@ -66,7 +83,7 @@ def test_podwise_mode_matches_pjit():
             pcfg = ParallelConfig(mesh=mesh, multi_pod=True, mode=mode,
                                   remat='none')
             step = make_train_step(cfg, pcfg, ocfg, lr)
-            with jax.set_mesh(mesh):
+            with use_mesh(mesh):
                 p2, o2, m = jax.jit(step)(params, opt, batch)
             outs[mode] = (jax.device_get(p2), float(m['loss']))
         a, b = outs['pjit'], outs['podwise']
@@ -84,10 +101,8 @@ def test_compressed_cross_pod_close_to_exact():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.parallel import collectives
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
-        mesh = jax.make_mesh((4,), ('pod',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = mk_mesh((4,), ('pod',))
         g = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
         ef = jnp.zeros((4, 256))
         def body(gl, efl):
@@ -129,14 +144,12 @@ def test_sharded_train_step_matches_single_device():
         import numpy as _np
         n = jax.device_count()
         if n == 1:
-            mesh = jax.make_mesh((1, 1), ('data', 'model'),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = mk_mesh((1, 1), ('data', 'model'))
         else:
-            mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = mk_mesh((2, 2), ('data', 'model'))
         pcfg = ParallelConfig(mesh=mesh, remat='none')
         step = make_train_step(cfg, pcfg, ocfg, lr)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             p2, o2, m = jax.jit(step)(params, opt, batch)
         print('LOSS', float(m['loss']))
     """
