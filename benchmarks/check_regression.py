@@ -1,0 +1,125 @@
+"""Benchmark regression gate for CI.
+
+    python benchmarks/check_regression.py --current bench-out \\
+        [--baseline benchmarks/baseline_smoke.json] [--tolerance 0.30]
+    python benchmarks/check_regression.py --current bench-out --write-baseline
+
+Compares watched throughput metrics from a ``--smoke`` benchmark run's
+``BENCH_*.json`` files against the committed baseline and exits non-zero
+when any metric regressed by more than ``--tolerance`` (default 30%).
+Higher-is-better metrics only; improvements always pass (and are the cue
+to refresh the baseline with ``--write-baseline``).
+
+Ratio metrics (speedups) are machine-independent; absolute throughputs
+wobble more across runners, which the default tolerance absorbs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# (file, path-into-json, metric kind) — all higher-is-better
+WATCHED = [
+    ("BENCH_table3_terasort.json",
+     ("result", "partition", "array_rec_per_s"), "abs"),
+    ("BENCH_table3_terasort.json",
+     ("result", "partition", "speedup"), "ratio"),
+    ("BENCH_table3_terasort.json",
+     ("result", "host", "sphere_array", "partition_rec_per_s"), "abs"),
+    ("BENCH_table3_terasort.json",
+     ("result", "host", "speedup"), "ratio"),
+]
+
+
+def _dig(obj, path):
+    for p in path:
+        if not isinstance(obj, dict) or p not in obj:
+            return None
+        obj = obj[p]
+    return obj
+
+
+def _metric_id(fname, path):
+    return f"{fname}:{'.'.join(path)}"
+
+
+def collect(current_dir: str) -> dict:
+    out = {}
+    for fname, path, _ in WATCHED:
+        fpath = os.path.join(current_dir, fname)
+        if not os.path.exists(fpath):
+            print(f"MISSING {fpath}")
+            continue
+        with open(fpath) as f:
+            val = _dig(json.load(f), path)
+        if isinstance(val, (int, float)):
+            out[_metric_id(fname, path)] = val
+        else:
+            print(f"MISSING metric {_metric_id(fname, path)}")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", required=True,
+                    help="directory holding this run's BENCH_*.json")
+    ap.add_argument("--baseline",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "baseline_smoke.json"))
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_GATE_TOLERANCE",
+                                                 0.30)),
+                    help="max fractional regression (default 0.30)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="overwrite the baseline with this run's values")
+    args = ap.parse_args(argv)
+
+    current = collect(args.current)
+    if args.write_baseline:
+        missing = [_metric_id(f, p) for f, p, _ in WATCHED
+                   if _metric_id(f, p) not in current]
+        if missing:
+            # a partial baseline would silently un-gate the absent
+            # metrics forever (they'd SKIP on every later run)
+            print(f"refusing to write baseline, watched metrics missing "
+                  f"from current run: {', '.join(missing)}")
+            return 1
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(current)} baseline metrics -> {args.baseline}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failed = []
+    for fname, path, _ in WATCHED:
+        mid = _metric_id(fname, path)
+        base, cur = baseline.get(mid), current.get(mid)
+        if base is None:
+            print(f"SKIP   {mid} (not in baseline)")
+            continue
+        if cur is None:
+            failed.append(mid)
+            print(f"FAIL   {mid}: missing from current run "
+                  f"(baseline {base})")
+            continue
+        floor = base * (1.0 - args.tolerance)
+        status = "ok" if cur >= floor else "FAIL"
+        print(f"{status:6} {mid}: {cur} vs baseline {base} "
+              f"(floor {floor:.0f})")
+        if cur < floor:
+            failed.append(mid)
+    if failed:
+        print(f"\nregression gate FAILED: {', '.join(failed)}")
+        return 1
+    print(f"\nregression gate ok ({len(current)} metrics, "
+          f"tolerance {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,7 +35,7 @@ import time
 
 import numpy as np
 
-from repro.core import SphereEngine, SphereJob
+from repro.core import SphereEngine, SphereJob, TaskSpec
 from repro.core.records import RecordBatch, scatter_by_ids
 from repro.core.shuffle import (partition_batch, range_partitioner,
                                 sample_boundaries, terasort_stages)
@@ -69,14 +69,12 @@ class _NoLocalityEngine(SphereEngine):
     (data always moves to the compute), and double-materialise at the
     shuffle barrier."""
 
-    def _run_stage(self, job, stage, tasks, parts, rep, *, first_stage):
-        tasks = [(k, nb, []) for (k, nb, _) in tasks]  # hide locality info
-        t = super()._run_stage(job, stage, tasks, parts, rep,
-                               first_stage=first_stage)
+    def _schedule_view(self, tasks):
+        return [TaskSpec(t.key, t.nbytes, ()) for t in tasks]
+
+    def _stage_barrier_seconds(self, stage_output_nbytes):
         # barrier materialisation: write + read back the stage output
-        nbytes = sum(sum(len(r) if isinstance(r, bytes) else r.nbytes
-                         for r in parts[w]) for w in parts)
-        return t + 2 * nbytes / 400e6  # disk write+read at 400 MB/s
+        return 2 * stage_output_nbytes / 400e6  # disk at 400 MB/s
 
 
 def _terasort_job(bounds, backend: str) -> SphereJob:
@@ -101,9 +99,9 @@ def run_host_level(n_records: int = 50_000) -> dict:
     data = _gen_records(n_records)
     sample = [data[i:i + RECORD]
               for i in range(0, min(len(data), 200 * RECORD), RECORD)]
-    # 4-byte boundaries: exact parity between the bytes comparison and the
-    # kernel's uint32 comparison (see core/shuffle.py)
-    bounds = sample_boundaries(sample, 6, key_bytes=4)
+    # full 10-byte TeraSort splitters: the multi-word kernel compare keeps
+    # the array backend on the kernel path (see core/shuffle.py)
+    bounds = sample_boundaries(sample, 6, key_bytes=KEY)
 
     out = {}
     baseline = None
@@ -129,6 +127,9 @@ def run_host_level(n_records: int = 50_000) -> dict:
             "partition_seconds": round(rep.partition_seconds, 4),
             "partition_rec_per_s": round(
                 rep.partitioned_records / max(rep.partition_seconds, 1e-9)),
+            # array backend: distinct traced shapes per pad-stable stage
+            # UDF (1 per stage = the jit-once guarantee held)
+            "udf_traces": dict(rep.udf_traces),
         }
     out["speedup"] = round(out["hadoop_style"]["sim_seconds"]
                            / out["sphere"]["sim_seconds"], 2)
@@ -140,12 +141,14 @@ def run_partition_bench(n_records: int = 1_000_000, n_buckets: int = 16,
     """The shuffle hot loop at scale: per-record Python partitioning vs
     the Pallas bucket-partition kernel + argsort/gather, min-of-N wall
     time each (array path warmed once so jit compile is excluded — both
-    backends report steady-state throughput)."""
+    backends report steady-state throughput).  Splitters are full
+    10-byte TeraSort keys: the kernel compares them as 3-word rows, so
+    the headline is the multi-word kernel path end-to-end."""
     import jax
 
     blob = _gen_records(n_records)
     records = [blob[i:i + RECORD] for i in range(0, len(blob), RECORD)]
-    bounds = sample_boundaries(records[:1000], n_buckets, key_bytes=4)
+    bounds = sample_boundaries(records[:1000], n_buckets, key_bytes=KEY)
     part = range_partitioner(bounds)
 
     def bytes_run():
@@ -179,6 +182,7 @@ def run_partition_bench(n_records: int = 1_000_000, n_buckets: int = 16,
     return {
         "records": n_records,
         "n_buckets": n_buckets,
+        "key_bytes": KEY,
         "bytes_seconds": round(t_bytes, 3),
         "array_seconds": round(t_array, 3),
         "bytes_rec_per_s": round(n_records / t_bytes),

@@ -34,10 +34,10 @@ client = SectorClient(master, "u", "chicago")
 client.upload("tera", payload, replication=3)
 
 # sample splitters, then: partition stage (shuffle) -> sort stage.
-# 4-byte splitters keep the bytes comparison and the kernel's uint32
-# comparison in exact agreement (see core/shuffle.py).
+# full 10-byte splitters: the kernel's multi-word lexicographic compare
+# matches the bytes comparison for any boundary length (core/shuffle.py).
 sample = [payload[i:i + RECORD] for i in range(0, 500 * RECORD, RECORD)]
-bounds = sample_boundaries(sample, 6, key_bytes=4)
+bounds = sample_boundaries(sample, 6, key_bytes=KEY)
 job = SphereJob("terasort", "tera",
                 terasort_stages(bounds, backend, 6, key_bytes=KEY),
                 record_size=RECORD, backend=backend)

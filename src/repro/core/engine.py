@@ -1,97 +1,83 @@
 """Sphere engine: locality-aware scheduling, load balancing, stragglers,
-fault tolerance (paper §4).
+fault tolerance (paper §4) — the thin orchestrator over the
+planner/executor split.
 
 Per the paper, Sphere provides: locating data, moving data **only if
 required**, locating/managing compute, load balancing, and fault tolerance;
-parallelisation is implicit. The execution model here:
+parallelisation is implicit.  The execution model:
 
   * compute workers are the Sector chunk servers themselves (compute sits
     on the storage cloud — "data waits for the task");
-  * each chunk task is scheduled on a replica holder when one has capacity
-    (zero movement), else on the least-loaded worker (movement is charged
-    through the transport simulator);
-  * a worker has a deterministic ``speed`` factor; processing time is
-    bytes / (rate * speed). Slow workers create stragglers;
-  * speculative re-execution: when every task is dispatched, tasks whose
-    expected completion exceeds ``speculate_factor`` x the median are
-    duplicated on idle replica holders; the earliest copy wins (paper §4
-    "load balancing" over replicas);
-  * failures: a dead worker's tasks are retried on surviving replicas
-    (bounded retries), matching Sector's replication guarantee;
+  * the **planner** (:mod:`repro.core.planner`) is pure: it schedules each
+    chunk task on a replica holder when one has capacity (zero movement),
+    else on the least-loaded worker; speculatively re-executes observed
+    stragglers on idle replicas (earliest copy wins); and prices the
+    shuffle from the actual per-bucket origin flows — all in simulated
+    time, with no access to record data;
+  * the **executor** (:mod:`repro.core.executor`) is the data plane: it
+    fetches chunks (bounded retries over surviving replicas — Sector's
+    replication guarantee), runs UDFs for real on the planned workers,
+    and bucketizes stage output.  ``backend="bytes"`` is the per-record
+    reference; ``backend="array"`` keeps each worker's partition as one
+    device-resident RecordBatch across stages and traces pad-stable
+    stage UDFs once;
   * between stages, records are bucketed by the stage partitioner and
-    buckets move to their owning worker over the simulated WAN — the Sphere
-    shuffle.
+    buckets move to their owning worker over the simulated WAN — the
+    Sphere shuffle, charged from each bucket's real origin workers.
 
-The engine executes UDFs for real (results are correct Python bytes), while
-time is fully simulated — so unit tests assert both output correctness and
-scheduling properties (locality fraction, speculation wins, retry counts).
+UDF outputs are correct Python bytes while time is fully simulated, so
+unit tests assert both output correctness and scheduling properties
+(locality fraction, speculation wins, retry counts) — and because the
+planner only sees task *sizes*, every scheduling counter and simulated
+second agrees across the two backends for the same job.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Tuple
 
-from repro.core.job import SphereJob, SphereStage
-from repro.core.records import RecordBatch, scatter_by_ids
-from repro.core.shuffle import partition_batch
+from repro.core.executor import make_executor
+from repro.core.job import SphereJob
+from repro.core.planner import (PROCESS_RATE, SpherePlanner, SphereReport,
+                                TaskSpec)
 from repro.sector.client import SectorClient
 from repro.sector.master import SectorMaster
-from repro.sector.server import ServerDown
 from repro.sector.transport import simulate_transfer
 
-PROCESS_RATE = 400e6  # bytes/s of UDF processing on a speed-1.0 worker
-
-# a worker's partition holds bytes records or RecordBatches, per backend
-Record = Union[bytes, RecordBatch]
-
-
-def _rec_nbytes(rec: Record) -> int:
-    return rec.nbytes if isinstance(rec, RecordBatch) else len(rec)
-
-
-@dataclass
-class SphereReport:
-    sim_seconds: float = 0.0
-    bytes_moved: int = 0
-    bytes_local: int = 0
-    tasks: int = 0
-    speculated: int = 0
-    speculation_wins: int = 0
-    retried: int = 0
-    locality_fraction: float = 1.0
-    stage_seconds: List[float] = field(default_factory=list)
-    # REAL wall-clock spent computing bucket assignments + scattering
-    # records in shuffles (everything else above is simulated time) —
-    # the bytes-vs-array backend comparison the benchmarks report.
-    partition_seconds: float = 0.0
-    partitioned_records: int = 0
+__all__ = ["SphereEngine", "SphereReport", "PROCESS_RATE"]
 
 
 class SphereEngine:
     def __init__(self, master: SectorMaster, client: SectorClient,
                  speeds: Optional[Dict[str, float]] = None,
-                 speculate_factor: float = 1.8, max_retries: int = 3):
+                 speculate_factor: float = 1.8, max_retries: int = 3,
+                 pad_block: int = 4096):
         self.master = master
         self.client = client
         self.speeds = speeds or {}
         self.speculate_factor = speculate_factor
         self.max_retries = max_retries
+        self.pad_block = pad_block
 
     # ------------------------------------------------------------- helpers
     def _workers(self) -> List[str]:
         return sorted(sid for sid in self.master.ring.servers()
                       if self.master.servers[sid].alive)
 
-    def _speed(self, sid: str) -> float:
-        return self.speeds.get(sid, 1.0)
-
-    def _proc_time(self, sid: str, nbytes: int) -> float:
-        return nbytes / (PROCESS_RATE * self._speed(sid))
-
-    def _move_time(self, nbytes: int, src_site: str, dst_site: str) -> float:
-        link = self.master.topology.link(src_site, dst_site)
+    def _move_time(self, nbytes: int, src: str, dst: str) -> float:
+        link = self.master.topology.link(self.master.servers[src].site,
+                                         self.master.servers[dst].site)
         return simulate_transfer(nbytes, link, self.client.protocol).seconds
+
+    # ------------------------------------------------- benchmark hooks
+    def _schedule_view(self, tasks: List[TaskSpec]) -> List[TaskSpec]:
+        """What replica placement the scheduler sees (overridden by the
+        Hadoop-style comparison engine to hide locality)."""
+        return tasks
+
+    def _stage_barrier_seconds(self, stage_output_nbytes: int) -> float:
+        """Extra materialisation cost after a stage (0 for Sphere; the
+        Hadoop-style engine charges a write+read barrier here)."""
+        return 0.0
 
     # ----------------------------------------------------------------- run
     def run(self, job: SphereJob, report: Optional[SphereReport] = None
@@ -107,180 +93,60 @@ class SphereEngine:
                 f"record_size {job.record_size} (records must not straddle "
                 f"chunk boundaries)")
 
-        # stage 0 input: Sector chunks with their replica locations
-        metas = self.master.lookup(job.input_file, self.client.user)
-        tasks: List[Tuple[str, int, List[str]]] = []  # (key, bytes, locs)
-        for m in metas:
-            locs = [s for s in m.locations
-                    if s in self.master.servers
-                    and self.master.servers[s].alive]
-            tasks.append((m.chunk_id, m.size, locs))
+        planner = SpherePlanner(speeds=self.speeds,
+                                speculate_factor=self.speculate_factor,
+                                move_time=self._move_time)
+        executor = make_executor(job, self.client, workers,
+                                 max_retries=self.max_retries,
+                                 pad_block=self.pad_block)
 
-        # records partitioned per worker across stages
-        parts: Dict[str, List[Record]] = {w: [] for w in workers}
+        # stage 0 input: Sector chunks with their live replica locations
+        metas = self.master.lookup(job.input_file, self.client.user)
+        tasks = [TaskSpec(m.chunk_id, m.size,
+                          tuple(s for s in m.locations
+                                if s in self.master.servers
+                                and self.master.servers[s].alive))
+                 for m in metas]
+
+        parts = executor.empty_parts()
         first = True
         for stage in job.stages:
-            t_stage = self._run_stage(job, stage, tasks, parts, rep,
-                                      first_stage=first)
+            plan = planner.plan_stage(self._schedule_view(tasks), workers)
+            rep.tasks += len(plan.tasks)
+            rep.bytes_local += plan.bytes_local
+            rep.bytes_moved += plan.bytes_moved
+            rep.speculated += plan.speculated
+            rep.speculation_wins += plan.speculation_wins
+            t_stage = plan.seconds
+
+            out = executor.run_stage(job, stage, plan, parts, rep,
+                                     first_stage=first)
+            if stage.partitioner is not None:
+                n = stage.n_buckets or len(workers)
+                buckets, origins = executor.bucketize(stage, out, n, rep)
+                # bucket i lives on worker i % len(workers); charge the
+                # movement of each fragment from its actual origin worker
+                flows = [(src, workers[i % len(workers)], nbytes)
+                         for i, origin in enumerate(origins)
+                         for src, nbytes in origin.items()]
+                t_shuffle, moved, local = planner.plan_shuffle(flows)
+                rep.bytes_moved += moved
+                rep.bytes_local += local
+                t_stage += t_shuffle
+                executor.place_buckets(buckets, parts)
+            else:
+                executor.set_parts(parts, out)
+
+            sizes = executor.part_sizes(parts)
+            t_stage += self._stage_barrier_seconds(sum(sizes.values()))
             rep.stage_seconds.append(t_stage)
             rep.sim_seconds += t_stage
             first = False
             # next stage's tasks are the current partitions (local to owner)
-            tasks = [(w, sum(_rec_nbytes(r) for r in parts[w]), [w])
-                     for w in workers if parts[w]]
+            tasks = [TaskSpec(w, sz, (w,))
+                     for w, sz in sizes.items() if sz]
 
         moved_total = rep.bytes_moved + rep.bytes_local
         rep.locality_fraction = (rep.bytes_local / moved_total
                                  if moved_total else 1.0)
-        if job.backend == "array":
-            outputs = [b"".join(p.to_bytes() for p in parts[w])
-                       for w in workers if parts[w]]
-        else:
-            outputs = [b"".join(parts[w]) for w in workers if parts[w]]
-        return outputs, rep
-
-    # ---------------------------------------------------------- one stage
-    def _run_stage(self, job: SphereJob, stage: SphereStage,
-                   tasks, parts, rep: SphereReport, *, first_stage: bool
-                   ) -> float:
-        workers = self._workers()
-        site = {w: self.master.servers[w].site for w in workers}
-        # Scheduling uses ESTIMATED speeds (uniform — the scheduler does not
-        # know a node is slow until it runs); execution reveals actual
-        # speeds, and speculation re-runs the surprises on replicas. This
-        # mirrors the paper's load balancing: replicas exist precisely so
-        # slow nodes can be routed around after the fact.
-        est_ready = {w: 0.0 for w in workers}
-        act_ready = {w: 0.0 for w in workers}
-
-        # --- schedule: locality first, then least-(estimated)-loaded -------
-        assignments: List[Tuple[str, str, int, List[str], float]] = []
-        for key, nbytes, locs in sorted(tasks, key=lambda t: -t[1]):
-            live_locs = [w for w in locs if w in est_ready]
-            candidates = live_locs or workers
-            w = min(candidates, key=lambda x: est_ready[x]
-                    + nbytes / PROCESS_RATE)
-            move = 0.0
-            if w in live_locs:
-                rep.bytes_local += nbytes
-            else:
-                src = live_locs[0] if live_locs else workers[0]
-                move = self._move_time(nbytes, site[src], site[w])
-                rep.bytes_moved += nbytes
-            est_ready[w] += move + nbytes / PROCESS_RATE
-            act_fin = act_ready[w] + move + self._proc_time(w, nbytes)
-            act_ready[w] = act_fin
-            assignments.append((key, w, nbytes, locs, act_fin))
-            rep.tasks += 1
-
-        # --- speculative re-execution of (observed) stragglers --------------
-        fins = sorted(a[4] for a in assignments)
-        median = fins[len(fins) // 2] if fins else 0.0
-        final: Dict[str, float] = {}
-        executor: Dict[str, str] = {}
-        for key, w, nbytes, locs, fin in assignments:
-            best_w, best_fin = w, fin
-            if fin > self.speculate_factor * median:
-                for alt in [x for x in locs if x != w and x in act_ready]:
-                    alt_fin = act_ready[alt] + self._proc_time(alt, nbytes)
-                    rep.speculated += 1
-                    if alt_fin < best_fin:
-                        best_w, best_fin = alt, alt_fin
-                        act_ready[alt] = alt_fin
-                        rep.speculation_wins += 1
-                        break
-            final[key] = best_fin
-            executor[key] = best_w
-
-        # --- execute UDFs for real (with failure retries) ------------------
-        array = job.backend == "array"
-        out_records: Dict[str, List[Record]] = {w: [] for w in workers}
-        for key, w, nbytes, locs, _ in assignments:
-            w = executor[key]
-            blob = self._fetch(job, key, locs, rep, first_stage, parts)
-            if blob is None:
-                continue
-            if array:
-                if first_stage:
-                    batch = job.split_batch(blob)
-                else:
-                    batch = RecordBatch.concat(blob)
-                out_records[w].append(stage.apply_batch(batch))
-            else:
-                records = job.split_records(blob) if first_stage else blob
-                out_records[w].extend(stage.apply_bytes(records))
-
-        # --- shuffle (if the stage has a partitioner) -----------------------
-        if stage.partitioner is not None:
-            n = stage.n_buckets or len(workers)
-            if array:
-                buckets = self._bucketize_array(stage, out_records, workers,
-                                                n, rep)
-            else:
-                buckets = self._bucketize_bytes(stage, out_records, workers,
-                                                n, rep)
-            # bucket i lives on worker i % len(workers); charge movement
-            shuffle_time = 0.0
-            for i, bucket in enumerate(buckets):
-                dst = workers[i % len(workers)]
-                nbytes = sum(_rec_nbytes(r) for r in bucket)
-                # half the records on average originate elsewhere
-                src = workers[(i + 1) % len(workers)]
-                if nbytes:
-                    t = self._move_time(nbytes, site[src], site[dst])
-                    shuffle_time = max(shuffle_time, t)
-                    rep.bytes_moved += nbytes // 2
-            for w in workers:
-                parts[w] = []
-            for i, bucket in enumerate(buckets):
-                parts[workers[i % len(workers)]].extend(bucket)
-            return (max(final.values()) if final else 0.0) + shuffle_time
-
-        for w in workers:
-            parts[w] = out_records[w]
-        return max(final.values()) if final else 0.0
-
-    # ---------------------------------------------------------- bucketize
-    def _bucketize_bytes(self, stage: SphereStage, out_records, workers,
-                         n: int, rep: SphereReport) -> List[List[bytes]]:
-        """Reference shuffle: one partitioner call per Python record."""
-        buckets: List[List[bytes]] = [[] for _ in range(n)]
-        t0 = time.perf_counter()
-        for w in workers:
-            for r in out_records[w]:
-                buckets[stage.partitioner(r, n)].append(r)
-                rep.partitioned_records += 1
-        rep.partition_seconds += time.perf_counter() - t0
-        return buckets
-
-    def _bucketize_array(self, stage: SphereStage, out_records, workers,
-                         n: int, rep: SphereReport
-                         ) -> List[List[RecordBatch]]:
-        """Array shuffle: per worker, one Pallas bucket-partition kernel
-        call (ids + histogram) and one argsort/segment gather."""
-        buckets: List[List[RecordBatch]] = [[] for _ in range(n)]
-        t0 = time.perf_counter()
-        for w in workers:
-            if not out_records[w]:
-                continue
-            batch = RecordBatch.concat(out_records[w])
-            ids, hist = partition_batch(batch, stage.partitioner, n)
-            for i, piece in enumerate(scatter_by_ids(batch, ids, hist)):
-                if piece.num_records:
-                    buckets[i].append(piece)
-            rep.partitioned_records += batch.num_records
-        rep.partition_seconds += time.perf_counter() - t0
-        return buckets
-
-    # ------------------------------------------------------------- fetch
-    def _fetch(self, job, key, locs, rep, first_stage, parts):
-        if not first_stage:
-            data = parts.get(key)
-            return data if data else None
-        for attempt in range(self.max_retries):
-            try:
-                return self.client.read_chunk(key)
-            except (IOError, ServerDown):
-                rep.retried += 1
-                self.client.run_repair()
-        return None
+        return executor.outputs(parts), rep

@@ -1,0 +1,280 @@
+"""Sphere data plane: per-backend executors (planner/executor split).
+
+An executor owns everything that touches record data — fetching chunks
+from Sector (with bounded retries), running stage UDFs on the worker the
+planner chose, bucketizing stage output for the shuffle, and materialising
+the final per-bucket blobs.  The planner (:mod:`repro.core.planner`)
+never sees a record; the executor never makes a placement decision.
+
+* :class:`BytesExecutor` — the per-record Python reference.  A worker's
+  partition is a list of ``bytes`` records.
+
+* :class:`ArrayExecutor` — the device-resident backend.  A worker's
+  partition is ONE :class:`RecordBatch` that stays on device across
+  stages: UDF apply -> bucket_partition kernel -> argsort/gather ->
+  device concat on the destination worker, with host bytes touched only
+  when reading Sector chunks (stage 0) and materialising final outputs.
+  Stage UDFs that declare ``pad_value`` are applied through a jit-once
+  wrapper: inputs are padded to a fixed block shape (the next power of
+  two at or above ``pad_block`` rows) so tasks share one traced shape
+  instead of recompiling per task shape.
+
+Both executors report identical shuffle flows (per-bucket origin bytes),
+so the planner charges movement from each bucket's *actual* origin
+workers and simulated time agrees across backends for the same job.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.job import SphereJob, SphereStage
+from repro.core.planner import SphereReport, StagePlan
+from repro.core.records import RecordBatch, scatter_by_ids
+from repro.core.shuffle import partition_batch
+from repro.sector.server import ServerDown
+
+# per-bucket origin accounting: origins[i][worker] = bytes of bucket i
+# that were produced on that worker
+Origins = List[Dict[str, int]]
+
+
+class _ExecutorBase:
+    def __init__(self, client, workers: Sequence[str], max_retries: int = 3):
+        self.client = client
+        self.workers = list(workers)
+        self.max_retries = max_retries
+
+    def _fetch_chunk(self, key: str, rep: SphereReport) -> Optional[bytes]:
+        """Read a stage-0 chunk, retrying over surviving replicas."""
+        for _ in range(self.max_retries):
+            try:
+                return self.client.read_chunk(key)
+            except (IOError, ServerDown):
+                rep.retried += 1
+                self.client.run_repair()
+        return None
+
+
+class BytesExecutor(_ExecutorBase):
+    """Reference data plane: partitions are lists of Python bytes."""
+
+    def empty_parts(self) -> Dict[str, List[bytes]]:
+        return {w: [] for w in self.workers}
+
+    def part_sizes(self, parts) -> Dict[str, int]:
+        return {w: sum(len(r) for r in parts[w]) for w in self.workers}
+
+    def run_stage(self, job: SphereJob, stage: SphereStage, plan: StagePlan,
+                  parts, rep: SphereReport, *, first_stage: bool
+                  ) -> Dict[str, List[bytes]]:
+        out: Dict[str, List[bytes]] = {w: [] for w in self.workers}
+        for t in plan.tasks:
+            if first_stage:
+                blob = self._fetch_chunk(t.key, rep)
+                if blob is None:
+                    continue
+                records = job.split_records(blob)
+            else:
+                records = parts.get(t.key)
+                if not records:
+                    continue
+            out[t.executor].extend(stage.apply_bytes(records))
+        return out
+
+    def bucketize(self, stage: SphereStage, out, n: int, rep: SphereReport
+                  ) -> Tuple[List[List[bytes]], Origins]:
+        """Reference shuffle: one partitioner call per Python record."""
+        buckets: List[List[bytes]] = [[] for _ in range(n)]
+        origins: Origins = [{} for _ in range(n)]
+        t0 = time.perf_counter()
+        for w in self.workers:
+            for r in out[w]:
+                b = stage.partitioner(r, n)
+                buckets[b].append(r)
+                origins[b][w] = origins[b].get(w, 0) + len(r)
+                rep.partitioned_records += 1
+        rep.partition_seconds += time.perf_counter() - t0
+        return buckets, origins
+
+    def place_buckets(self, buckets, parts) -> None:
+        for w in self.workers:
+            parts[w] = []
+        for i, bucket in enumerate(buckets):
+            parts[self.workers[i % len(self.workers)]].extend(bucket)
+
+    def set_parts(self, parts, out) -> None:
+        for w in self.workers:
+            parts[w] = out[w]
+
+    def outputs(self, parts) -> List[bytes]:
+        return [b"".join(parts[w]) for w in self.workers if parts[w]]
+
+
+class _TracedUDF:
+    """jit wrapper around a batch UDF that counts trace events — the
+    trace-time side effect fires once per distinct input shape, so
+    ``traces == 1`` certifies the stage compiled exactly once."""
+
+    def __init__(self, name: str, udf):
+        self.name = name
+        self.udf = udf
+        self.traces = 0
+        self._jit = jax.jit(self._call)
+
+    def _call(self, data: jax.Array) -> jax.Array:
+        self.traces += 1
+        out = self.udf(RecordBatch(data))
+        if not isinstance(out, RecordBatch):
+            raise TypeError(f"stage {self.name!r} batch_udf must return "
+                            f"a RecordBatch, got {type(out).__name__}")
+        return out.data
+
+    def __call__(self, data: jax.Array) -> jax.Array:
+        return self._jit(data)
+
+
+class ArrayExecutor(_ExecutorBase):
+    """Device-resident data plane: one RecordBatch per worker partition."""
+
+    def __init__(self, client, workers: Sequence[str], max_retries: int = 3,
+                 pad_block: int = 4096):
+        super().__init__(client, workers, max_retries)
+        self.pad_block = pad_block
+        self._traced: Dict[int, _TracedUDF] = {}
+
+    def empty_parts(self) -> Dict[str, Optional[RecordBatch]]:
+        return {w: None for w in self.workers}
+
+    def part_sizes(self, parts) -> Dict[str, int]:
+        return {w: (parts[w].nbytes if parts[w] is not None else 0)
+                for w in self.workers}
+
+    # --------------------------------------------------------- UDF apply
+    def _apply_padded(self, stage: SphereStage, batch: RecordBatch,
+                      target: int, rep: SphereReport) -> RecordBatch:
+        # keyed by stage identity, not name: same-named stages must not
+        # share a traced UDF (the name is only the report label)
+        traced = self._traced.get(id(stage))
+        if traced is None:
+            traced = self._traced[id(stage)] = _TracedUDF(
+                stage.name, stage.batch_udf)
+        n = batch.num_records
+        data = batch.data
+        if target != n:
+            data = jnp.pad(data, ((0, target - n), (0, 0)),
+                           constant_values=stage.pad_value)
+        out = traced(data)
+        # max-aggregate per report label: a retracing stage must not be
+        # masked by a later same-named stage that traced once
+        rep.udf_traces[stage.name] = max(rep.udf_traces.get(stage.name, 0),
+                                         traced.traces)
+        if out.shape[0] != target:
+            raise ValueError(
+                f"stage {stage.name!r} declares pad_value but its batch_udf "
+                f"changed the row count ({target} -> {out.shape[0]}); "
+                f"pad-stable UDFs must map padding rows to tail padding")
+        return RecordBatch(out[:n])
+
+    def _stage_block_shape(self, job: SphereJob, plan: StagePlan, parts,
+                           first_stage: bool) -> int:
+        """Fixed block shape for a pad-stable stage: power-of-two ceiling
+        of the stage's largest task, floored at pad_block.  Row counts
+        come from the plan's task sizes / resident partitions, so no
+        batch has to be fetched (or held) to compute it."""
+        max_rows = 0
+        for t in plan.tasks:
+            if first_stage:
+                rows = t.nbytes // job.record_size
+            else:
+                batch = parts.get(t.key)
+                rows = batch.num_records if batch is not None else 0
+            max_rows = max(max_rows, rows)
+        if not max_rows:
+            return 0
+        target = self.pad_block
+        while target < max_rows:
+            target *= 2
+        return target
+
+    def run_stage(self, job: SphereJob, stage: SphereStage, plan: StagePlan,
+                  parts, rep: SphereReport, *, first_stage: bool
+                  ) -> Dict[str, List[RecordBatch]]:
+        pad_stable = (stage.batch_udf is not None
+                      and stage.pad_value is not None)
+        # the one fixed shape every task of this stage pads to, so the
+        # UDF traces exactly once per stage
+        target = (self._stage_block_shape(job, plan, parts, first_stage)
+                  if pad_stable else 0)
+        out: Dict[str, List[RecordBatch]] = {w: [] for w in self.workers}
+        for t in plan.tasks:
+            if first_stage:
+                blob = self._fetch_chunk(t.key, rep)
+                if blob is None:
+                    continue
+                batch = job.split_batch(blob)
+            else:
+                batch = parts.get(t.key)
+                if batch is None or not batch.num_records:
+                    continue
+            if pad_stable and target:
+                out[t.executor].append(
+                    self._apply_padded(stage, batch, target, rep))
+            else:
+                # legacy/compat path: bytes-udf decode, per-shape tracing
+                out[t.executor].append(stage.apply_batch(batch))
+        return out
+
+    # ----------------------------------------------------------- shuffle
+    def bucketize(self, stage: SphereStage, out, n: int, rep: SphereReport
+                  ) -> Tuple[List[List[RecordBatch]], Origins]:
+        """Array shuffle: per worker, one Pallas bucket-partition kernel
+        call (ids + histogram) and one argsort/segment gather.  Records
+        never leave the device; only the tiny ids/hist arrays come back
+        to the host to drive the gather."""
+        buckets: List[List[RecordBatch]] = [[] for _ in range(n)]
+        origins: Origins = [{} for _ in range(n)]
+        t0 = time.perf_counter()
+        for w in self.workers:
+            if not out[w]:
+                continue
+            batch = RecordBatch.concat(out[w])
+            ids, hist = partition_batch(batch, stage.partitioner, n)
+            for i, piece in enumerate(scatter_by_ids(batch, ids, hist)):
+                if piece.num_records:
+                    buckets[i].append(piece)
+                    origins[i][w] = piece.nbytes
+            rep.partitioned_records += batch.num_records
+        rep.partition_seconds += time.perf_counter() - t0
+        return buckets, origins
+
+    def place_buckets(self, buckets, parts) -> None:
+        # bucket i lives on worker i % len(workers); a destination holding
+        # several buckets keeps them in bucket order (matching the bytes
+        # path's append order), merged into one device-resident batch
+        incoming: Dict[str, List[RecordBatch]] = {w: [] for w in self.workers}
+        for i, pieces in enumerate(buckets):
+            incoming[self.workers[i % len(self.workers)]].extend(pieces)
+        for w in self.workers:
+            parts[w] = (RecordBatch.concat(incoming[w])
+                        if incoming[w] else None)
+
+    def set_parts(self, parts, out) -> None:
+        for w in self.workers:
+            parts[w] = RecordBatch.concat(out[w]) if out[w] else None
+
+    def outputs(self, parts) -> List[bytes]:
+        # the ONLY host materialisation of record data after stage 0
+        return [parts[w].to_bytes() for w in self.workers
+                if parts[w] is not None and parts[w].num_records]
+
+
+def make_executor(job: SphereJob, client, workers: Sequence[str], *,
+                  max_retries: int = 3, pad_block: int = 4096):
+    if job.backend == "array":
+        return ArrayExecutor(client, workers, max_retries=max_retries,
+                             pad_block=pad_block)
+    return BytesExecutor(client, workers, max_retries=max_retries)

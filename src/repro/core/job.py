@@ -43,6 +43,14 @@ class SphereStage:
     partitioner: Optional[Partitioner] = None  # None = no shuffle after
     n_buckets: int = 0                         # 0 = same as worker count
     batch_udf: Optional[BatchUDF] = None       # array-backend stage body
+    # pad_value declares batch_udf *pad-stable*: the array executor may
+    # pad input rows with this byte up to a fixed block shape, call
+    # the UDF on the padded batch (so it is traced once per stage, not
+    # once per task shape), and slice the first n rows back off.  The
+    # UDF must preserve the row count and keep padding rows at the tail
+    # — e.g. identity, row-local maps, or a stable sort with max-byte
+    # (0xff) padding.  None = shape-polymorphic UDF, traced per shape.
+    pad_value: Optional[int] = None
 
     def apply_bytes(self, records: Sequence[bytes]) -> List[bytes]:
         if self.udf is None:

@@ -1,0 +1,171 @@
+"""Sphere control plane: pure locality/speculation planner (paper §4).
+
+``SpherePlanner`` is the scheduling half of the engine's planner/executor
+split.  It decides *where* every task runs and *how long* the stage takes
+in simulated time — locality first, then least-(estimated)-loaded, with
+speculative re-execution of observed stragglers on replicas — without
+touching any data.  Its only effect is the returned :class:`StagePlan`,
+so scheduling behaviour is unit-testable with no Sector cloud at all:
+callers inject ``move_time(nbytes, src_worker, dst_worker)`` and per-
+worker ``speeds``; identical inputs always produce identical plans.
+
+Scheduling uses ESTIMATED speeds (uniform — the scheduler does not know a
+node is slow until it runs); execution reveals actual speeds, and
+speculation re-runs the surprises on replicas.  This mirrors the paper's
+load balancing: replicas exist precisely so slow nodes can be routed
+around after the fact.
+
+The data-plane half (fetching chunks, running UDFs, bucketizing records)
+lives in :mod:`repro.core.executor`; :class:`repro.core.engine.SphereEngine`
+glues the two together.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+PROCESS_RATE = 400e6  # bytes/s of UDF processing on a speed-1.0 worker
+
+# simulated seconds to move nbytes between two workers' sites
+MoveTime = Callable[[int, str, str], float]
+
+
+@dataclass
+class SphereReport:
+    sim_seconds: float = 0.0
+    bytes_moved: int = 0
+    bytes_local: int = 0
+    tasks: int = 0
+    speculated: int = 0
+    speculation_wins: int = 0
+    retried: int = 0
+    locality_fraction: float = 1.0
+    stage_seconds: List[float] = field(default_factory=list)
+    # REAL wall-clock spent computing bucket assignments + scattering
+    # records in shuffles (everything else above is simulated time) —
+    # the bytes-vs-array backend comparison the benchmarks report.
+    partition_seconds: float = 0.0
+    partitioned_records: int = 0
+    # array backend: number of distinct shapes each pad-stable stage UDF
+    # was traced with (1 = the jit-once guarantee held for that stage)
+    udf_traces: Dict[str, int] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class TaskSpec:
+    """One schedulable unit of work: a chunk (stage 0) or a worker's
+    partition (later stages), with the replica holders the scheduler may
+    place it on for free."""
+    key: str
+    nbytes: int
+    locs: Tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class TaskPlan:
+    key: str
+    nbytes: int
+    locs: Tuple[str, ...]
+    worker: str        # originally scheduled worker
+    executor: str      # final executing worker (differs when a
+                       # speculative copy on a replica won the race)
+    finish: float      # simulated completion time within the stage
+
+
+@dataclass(frozen=True)
+class StagePlan:
+    tasks: Tuple[TaskPlan, ...]
+    seconds: float          # stage makespan (max task finish)
+    bytes_local: int
+    bytes_moved: int
+    speculated: int
+    speculation_wins: int
+
+
+class SpherePlanner:
+    def __init__(self, *, speeds: Optional[Dict[str, float]] = None,
+                 speculate_factor: float = 1.8,
+                 move_time: Optional[MoveTime] = None):
+        self.speeds = dict(speeds or {})
+        self.speculate_factor = speculate_factor
+        self._move_time = move_time or (lambda nbytes, src, dst: 0.0)
+
+    def _speed(self, worker: str) -> float:
+        return self.speeds.get(worker, 1.0)
+
+    def _proc_time(self, worker: str, nbytes: int) -> float:
+        return nbytes / (PROCESS_RATE * self._speed(worker))
+
+    # ------------------------------------------------------------- stage
+    def plan_stage(self, tasks: Sequence[TaskSpec], workers: Sequence[str]
+                   ) -> StagePlan:
+        """Place every task, then speculate on observed stragglers."""
+        est_ready = {w: 0.0 for w in workers}
+        act_ready = {w: 0.0 for w in workers}
+        bytes_local = bytes_moved = 0
+
+        # --- schedule: locality first, then least-(estimated)-loaded ----
+        scheduled: List[Tuple[TaskSpec, str, float]] = []
+        for t in sorted(tasks, key=lambda t: -t.nbytes):
+            live = [w for w in t.locs if w in est_ready]
+            candidates = live or list(workers)
+            w = min(candidates,
+                    key=lambda x: est_ready[x] + t.nbytes / PROCESS_RATE)
+            move = 0.0
+            if w in live:
+                bytes_local += t.nbytes
+            else:
+                src = live[0] if live else workers[0]
+                move = self._move_time(t.nbytes, src, w)
+                bytes_moved += t.nbytes
+            est_ready[w] += move + t.nbytes / PROCESS_RATE
+            fin = act_ready[w] + move + self._proc_time(w, t.nbytes)
+            act_ready[w] = fin
+            scheduled.append((t, w, fin))
+
+        # --- speculative re-execution of (observed) stragglers -----------
+        fins = sorted(f for _, _, f in scheduled)
+        median = fins[len(fins) // 2] if fins else 0.0
+        speculated = wins = 0
+        plans: List[TaskPlan] = []
+        for t, w, fin in scheduled:
+            best_w, best_fin = w, fin
+            if fin > self.speculate_factor * median:
+                for alt in [x for x in t.locs if x != w and x in act_ready]:
+                    alt_fin = act_ready[alt] + self._proc_time(alt, t.nbytes)
+                    speculated += 1
+                    if alt_fin < best_fin:
+                        best_w, best_fin = alt, alt_fin
+                        act_ready[alt] = alt_fin
+                        wins += 1
+                        break
+            plans.append(TaskPlan(t.key, t.nbytes, t.locs, w, best_w,
+                                  best_fin))
+        seconds = max((p.finish for p in plans), default=0.0)
+        return StagePlan(tuple(plans), seconds, bytes_local, bytes_moved,
+                         speculated, wins)
+
+    # ----------------------------------------------------------- shuffle
+    def plan_shuffle(self, flows: Sequence[Tuple[str, str, int]]
+                     ) -> Tuple[float, int, int]:
+        """Time + movement for a shuffle given its actual record flows.
+
+        ``flows`` holds one ``(src_worker, dst_worker, nbytes)`` entry per
+        bucket fragment — the bytes of each bucket that originated on each
+        worker, as observed by the executor.  Fragments staying on their
+        origin worker are local (no movement, no time); the rest transfer
+        in parallel over distinct links, so the shuffle completes when the
+        slowest flow lands.  Returns (seconds, bytes_moved, bytes_local).
+        """
+        seconds = 0.0
+        moved = local = 0
+        for src, dst, nbytes in flows:
+            if not nbytes:
+                continue
+            if src == dst:
+                local += nbytes
+            else:
+                seconds = max(seconds,
+                              self._move_time(nbytes, src, dst))
+                moved += nbytes
+        return seconds, moved, local

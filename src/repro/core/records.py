@@ -10,11 +10,13 @@ array operations.
 
 Conventions shared by the bytes reference path and the array path:
 
-* **Range keys** are the big-endian ``uint32`` view of the first 4 bytes
-  of a record (shorter records are zero-padded).  Comparing these words
-  is identical to comparing the 4-byte prefixes lexicographically, so
-  the array path agrees with ``range_partitioner`` record-for-record
-  whenever the boundaries are at most 4 bytes long.
+* **Range keys** are rows of big-endian ``uint32`` words covering a
+  record's key prefix (``key_words`` — the tail word is zero-padded, and
+  an optional trailing length word breaks ties exactly like Python's
+  shorter-prefix-sorts-first rule).  Comparing word rows
+  lexicographically is identical to comparing the byte prefixes, so the
+  array path agrees with ``range_partitioner`` record-for-record for
+  boundaries of any length (10-byte TeraSort keys use 3 words).
 * **Hash keys** are FNV-1a 32-bit over the first ``key_bytes`` bytes —
   ``fnv1a32`` is the scalar reference, ``hash_keys_u32`` the vectorised
   twin.  Both paths then map the hash onto buckets by counting the
@@ -165,6 +167,28 @@ class RecordBatch:
             words.append((w[:, 0] << 24) | (w[:, 1] << 16)
                          | (w[:, 2] << 8) | w[:, 3])
         return words
+
+    def key_words(self, key_bytes: int, *, n_words: int | None = None,
+                  length_word: int | None = None) -> jax.Array:
+        """[n, k] big-endian uint32 key rows for the multi-word kernel.
+
+        The first ``key_bytes`` bytes of each record, zero-padded into
+        4-byte words.  ``n_words`` right-pads with zero columns (aligning
+        a batch against a wider boundary table); ``length_word`` appends
+        one constant trailing word so variable-length boundary strings
+        compare exactly like Python ``bytes`` (when the zero-padded words
+        tie, the shorter string sorts first).
+        """
+        words = self._key_words(key_bytes)
+        n = self.num_records
+        if n_words is not None:
+            while len(words) < n_words:
+                words.append(jnp.zeros((n,), jnp.uint32))
+        if not words:
+            words.append(jnp.zeros((n,), jnp.uint32))
+        if length_word is not None:
+            words.append(jnp.full((n,), length_word, jnp.uint32))
+        return jnp.stack(words, axis=1)
 
     def sort_by_key(self, key_bytes: int) -> "RecordBatch":
         """Stable sort by the full key prefix (lexicographic, any length)."""

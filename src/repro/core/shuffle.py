@@ -12,10 +12,12 @@ that rule so the two paths agree record-for-record:
   and vectorised twins in :mod:`repro.core.records`) and buckets the
   hash against ``uniform_hash_bounds``.
 * ``RangePartitioner`` keeps the classic TeraSort binary search over
-  sampled boundaries.  Its array path compares big-endian uint32 views
-  of the first 4 key bytes, which matches the bytes comparison whenever
-  boundaries are at most 4 bytes (use ``sample_boundaries(...,
-  key_bytes=4)`` when targeting the array backend).
+  sampled boundaries.  Its array path compares rows of big-endian uint32
+  words lexicographically (the kernel's multi-word compare), covering
+  boundaries of any length — 10-byte TeraSort keys use 3 words.  When
+  boundary lengths vary, a trailing length word reproduces Python's
+  shorter-prefix-sorts-first bytes ordering exactly, so the kernel path
+  never needs the per-record host fallback.
 """
 from __future__ import annotations
 
@@ -38,10 +40,12 @@ def _kernel_partition(keys: jax.Array, bounds_u32: np.ndarray, n: int,
                       ) -> Tuple[jax.Array, jax.Array]:
     """bucket_partition over uint32 keys with degenerate-shape handling.
 
-    The Pallas kernel needs at least one boundary; n == 1 (or an empty
-    boundary list) means every record lands in bucket 0.  When there are
-    more boundaries than n - 1 the tail buckets are clamped onto n - 1,
-    mirroring the ``min(lo, n - 1)`` in the bytes reference.
+    ``keys`` is [N] (single-word) or [N, k] (multi-word rows) with
+    ``bounds_u32`` shaped to match.  The Pallas kernel needs at least one
+    boundary; n == 1 (or an empty boundary list) means every record lands
+    in bucket 0.  When there are more boundaries than n - 1 the tail
+    buckets are clamped onto n - 1, mirroring the ``min(lo, n - 1)`` in
+    the bytes reference.
     """
     nrec = keys.shape[0]
     if nrec == 0 or n <= 1 or len(bounds_u32) == 0:
@@ -100,23 +104,41 @@ class RangePartitioner:
                 hi = mid
         return min(lo, n - 1)
 
-    def bounds_u32(self) -> np.ndarray:
-        """Boundaries as big-endian uint32 of their first 4 bytes."""
-        return np.array([int.from_bytes(b[:4].ljust(4, b"\0"), "big")
-                         for b in self.bnd], dtype=np.uint32)
+    def bounds_words(self, n_words: int, lengths: bool) -> np.ndarray:
+        """Boundaries as [n-1, k] big-endian uint32 word rows, zero-padded
+        to ``n_words`` words, plus a trailing byte-length word when
+        ``lengths`` is set (the variable-length tiebreak)."""
+        rows = []
+        for b in self.bnd:
+            padded = b[:4 * n_words].ljust(4 * n_words, b"\0")
+            row = [int.from_bytes(padded[4 * i:4 * i + 4], "big")
+                   for i in range(n_words)]
+            if lengths:
+                row.append(len(b))
+            rows.append(row)
+        return np.array(rows, dtype=np.uint32)
 
     def bucket_ids(self, batch: RecordBatch, n: int, *,
                    block_n: int = 1 << 20, interpret: bool | None = None
                    ) -> Tuple[jax.Array, jax.Array]:
-        # The kernel compares uint32 views of 4-byte key prefixes, which
-        # only matches the bytes path when boundaries fit in 4 bytes
-        # (sample_boundaries(..., key_bytes=4)).  Longer boundaries take
-        # the per-record host loop so the assignment never silently
-        # diverges from the reference.
-        if self.bnd and len(self.bnd[0]) > 4:
-            return _host_partition(batch, self, n)
-        kb = min(len(self.bnd[0]), 4) if self.bnd else 4
-        return _kernel_partition(batch.keys_u32(kb), self.bounds_u32(), n,
+        # Multi-word lexicographic compare: boundary bytes and key
+        # prefixes become rows of big-endian uint32 words, so boundaries
+        # of any length stay on the kernel path.  A record's comparison
+        # key is its first len(bnd[0]) bytes (clipped to the record), so
+        # when any boundary length differs from that key length the
+        # zero-padded words can tie where the byte strings differ — a
+        # trailing length word reproduces bytes ordering exactly.
+        if not self.bnd:
+            return _kernel_partition(batch.keys_u32(4), np.empty(0), n,
+                                     block_n=block_n, interpret=interpret)
+        key_len = min(len(self.bnd[0]), batch.record_size)
+        width = max(key_len, max(len(b) for b in self.bnd))
+        n_words = max(1, -(-width // 4))
+        need_len = any(len(b) != key_len for b in self.bnd)
+        keys = batch.key_words(key_len, n_words=n_words,
+                               length_word=key_len if need_len else None)
+        bounds = self.bounds_words(n_words, lengths=need_len)
+        return _kernel_partition(keys, bounds, n,
                                  block_n=block_n, interpret=interpret)
 
 
@@ -170,11 +192,18 @@ def terasort_stages(bounds: Sequence[bytes], backend: str, n_buckets: int,
     from repro.core.job import SphereStage
     part = range_partitioner(bounds)
     if backend == "array":
+        # pad_value=0xff declares both batch UDFs pad-stable, so the
+        # executor pads to a fixed block shape and traces each once:
+        # identity trivially keeps padding rows at the tail, and the
+        # stable sort sends all-0xff padding keys to the end (ties with a
+        # real all-0xff key keep the real record first — input order).
         return [
             SphereStage("partition", batch_udf=lambda b: b,
-                        partitioner=part, n_buckets=n_buckets),
+                        partitioner=part, n_buckets=n_buckets,
+                        pad_value=0xFF),
             SphereStage("sort",
-                        batch_udf=lambda b: b.sort_by_key(key_bytes)),
+                        batch_udf=lambda b: b.sort_by_key(key_bytes),
+                        pad_value=0xFF),
         ]
     return [
         SphereStage("partition", lambda rs: list(rs),
@@ -188,12 +217,15 @@ def sample_boundaries(records: Sequence[bytes], n_buckets: int,
                       key_bytes: int = 10) -> List[bytes]:
     """Sample keys to build balanced range boundaries (TeraSort pre-pass).
 
-    Use ``key_bytes=4`` (or fewer) when the job will run on the array
-    backend: 4-byte boundaries make the kernel's uint32 comparison exact.
+    Boundaries of any length stay on the kernel path (multi-word
+    compare), so full 10-byte TeraSort keys are fine on the array
+    backend.  When ``n_buckets > len(records)`` some boundaries repeat
+    (the tail buckets stay empty); the index is clamped at both ends so
+    the result is always sorted.
     """
     keys = sorted(r[:key_bytes] for r in records)
     if not keys or n_buckets <= 1:
         return []
     step = len(keys) / n_buckets
-    return [keys[min(int(step * i) - 1, len(keys) - 1)]
+    return [keys[min(max(int(step * i) - 1, 0), len(keys) - 1)]
             for i in range(1, n_buckets)]

@@ -1,10 +1,14 @@
 """Bucket partition kernel — the TeraSort range-partitioner hot loop.
 
 Given sorted boundaries (the sampled splitters), computes each key's bucket
-id and a per-bucket histogram. Bucket id = #boundaries < key, computed as a
-vectorised comparison against the boundary table pinned in VMEM; the
-histogram accumulates in the output ref across the sequentially-executed
-grid (TPU grid semantics), so no host-side reduction is needed.
+id and a per-bucket histogram. Keys and boundaries are rows of k big-endian
+uint32 words compared lexicographically — k = 1 is the classic single-word
+case, 10-byte TeraSort keys use k = 3 — so arbitrary-length byte prefixes
+partition on the kernel path. Bucket id = #boundaries < key, computed as a
+word-by-word vectorised comparison against the boundary table pinned in
+VMEM (k is static, the word loop unrolls at trace time); the histogram
+accumulates in the output ref across the sequentially-executed grid (TPU
+grid semantics), so no host-side reduction is needed.
 """
 from __future__ import annotations
 
@@ -23,10 +27,18 @@ def _kernel(keys_ref, bounds_ref, ids_ref, hist_ref, *, n_buckets: int,
     def _init():
         hist_ref[...] = jnp.zeros_like(hist_ref)
 
-    keys = keys_ref[...]                        # [bn] uint32
-    bounds = bounds_ref[...]                    # [n_buckets-1]
-    ids = jnp.sum((keys[:, None] > bounds[None, :]).astype(jnp.int32),
-                  axis=1)                       # [bn]
+    keys = keys_ref[...]                        # [bn, k] uint32
+    bounds = bounds_ref[...]                    # [n_buckets-1, k]
+    k = keys.shape[1]
+    # lexicographic bounds[j] < keys[r]: scan words while prefixes tie
+    lt = jnp.zeros((bn, n_buckets - 1), jnp.bool_)
+    eq = jnp.ones((bn, n_buckets - 1), jnp.bool_)
+    for w in range(k):
+        kw = keys[:, w][:, None]                # [bn, 1]
+        bw = bounds[:, w][None, :]              # [1, n_buckets-1]
+        lt = lt | (eq & (bw < kw))
+        eq = eq & (bw == kw)
+    ids = jnp.sum(lt.astype(jnp.int32), axis=1)  # [bn]
     # mask padded tail keys into bucket 0 with zero histogram weight
     pos = i * bn + jax.lax.iota(jnp.int32, bn)
     valid = pos < n_valid
@@ -41,14 +53,22 @@ def _kernel(keys_ref, bounds_ref, ids_ref, hist_ref, *, n_buckets: int,
 def bucket_partition_call(keys: jax.Array, bounds: jax.Array, *,
                           n_buckets: int, block_n: int = 2048,
                           interpret: bool = False):
-    """keys: [N] uint32; bounds: [n_buckets-1] uint32 (sorted).
+    """keys: [N] or [N, k] uint32; bounds: [n_buckets-1] or [n_buckets-1, k]
+    uint32 rows, sorted lexicographically.
 
     Returns (ids [N] int32, hist [n_buckets] int32)."""
-    N = keys.shape[0]
+    if keys.ndim == 1:
+        keys = keys[:, None]
+    if bounds.ndim == 1:
+        bounds = bounds[:, None]
+    if keys.shape[1] != bounds.shape[1]:
+        raise ValueError(f"keys have {keys.shape[1]} words per row but "
+                         f"bounds have {bounds.shape[1]}")
+    N, k = keys.shape
     bn = min(block_n, N)
     pad = (-N) % bn
     if pad:
-        keys = jnp.pad(keys, (0, pad))
+        keys = jnp.pad(keys, ((0, pad), (0, 0)))
     nb = keys.shape[0] // bn
 
     kern = functools.partial(_kernel, n_buckets=n_buckets, n_valid=N, bn=bn)
@@ -56,8 +76,8 @@ def bucket_partition_call(keys: jax.Array, bounds: jax.Array, *,
         kern,
         grid=(nb,),
         in_specs=[
-            pl.BlockSpec((bn,), lambda i: (i,)),
-            pl.BlockSpec((n_buckets - 1,), lambda i: (0,)),
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((n_buckets - 1, k), lambda i: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((bn,), lambda i: (i,)),

@@ -1,10 +1,30 @@
-"""Oracle for the bucket partitioner."""
+"""Oracle for the bucket partitioner.
+
+Independent of the kernel's word-by-word compare: each k-word row is
+folded into one arbitrary-precision Python int (big-endian word order),
+then bucket id = #{bounds < key} via bisect — the same strict rule the
+bytes-path partitioners implement.
+"""
 from __future__ import annotations
+
+from bisect import bisect_left
+
+import numpy as np
 
 import jax.numpy as jnp
 
 
+def _row_ints(a: np.ndarray) -> list:
+    if a.ndim == 1:
+        a = a[:, None]
+    k = a.shape[1]
+    return [sum(int(row[w]) << (32 * (k - 1 - w)) for w in range(k))
+            for row in a]
+
+
 def bucket_partition_ref(keys, bounds, n_buckets: int):
-    ids = jnp.searchsorted(bounds, keys, side="right").astype(jnp.int32)
-    hist = jnp.bincount(ids, length=n_buckets).astype(jnp.int32)
-    return ids, hist
+    bi = _row_ints(np.asarray(bounds))
+    ids = np.array([bisect_left(bi, v) for v in _row_ints(np.asarray(keys))],
+                   dtype=np.int32)
+    hist = np.bincount(ids, minlength=n_buckets).astype(np.int32)
+    return jnp.asarray(ids), jnp.asarray(hist)

@@ -1,0 +1,183 @@
+"""Engine fault-tolerance/speculation on the ARRAY backend, and
+cross-backend report agreement.
+
+The planner only sees task sizes, never record data — so for the same
+job every scheduling counter and simulated second must agree between the
+bytes reference and the device-resident array executor.  These tests
+exercise the paths PR 1 only covered via bytes (stragglers, dead-worker
+retries) on the array backend, and pin the planner-purity guarantee by
+diffing SphereReports across backends."""
+import numpy as np
+import pytest
+
+from conftest import make_cloud
+from repro.core import SphereEngine, SphereJob, SphereStage
+from repro.core.shuffle import sample_boundaries, terasort_stages
+
+REC = 100
+
+
+def _upload(client, name, n, seed=0, replication=2):
+    rng = np.random.default_rng(seed)
+    data = rng.bytes(n * REC)
+    client.upload(name, data, replication=replication)
+    return data
+
+
+def _identity_job(backend):
+    return SphereJob("id", "f",
+                     [SphereStage("id", lambda rs: list(rs),
+                                  batch_udf=lambda b: b, pad_value=0xFF)],
+                     record_size=REC, backend=backend)
+
+
+@pytest.mark.parametrize("backend", ["bytes", "array"])
+def test_straggler_speculation(tmp_path, backend):
+    """One 50x-slow worker, full replication: speculation must win tasks
+    back onto the fast replica — on both record backends."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000,
+                                         n_servers=2)
+    _upload(client, "f", n=400, replication=2)
+    slow = {servers[0].server_id: 0.02, servers[1].server_id: 1.0}
+    eng = SphereEngine(master, client, speeds=slow, speculate_factor=1.5)
+    outs, rep = eng.run(_identity_job(backend))
+    assert rep.speculated > 0
+    assert rep.speculation_wins > 0
+    assert sum(len(o) for o in outs) == 400 * REC  # nothing lost
+
+
+@pytest.mark.parametrize("backend", ["bytes", "array"])
+def test_worker_failure_retry(tmp_path, backend):
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    data = _upload(client, "f", n=50, replication=3)
+    servers[1].kill()
+    master.deregister("s1")
+    outs, rep = SphereEngine(master, client).run(_identity_job(backend))
+    assert len(b"".join(outs)) == len(data)
+
+
+def _report_key(rep):
+    """The backend-independent slice of a SphereReport (partition_seconds
+    and udf_traces are real wall-clock / array-only, so excluded)."""
+    return (rep.tasks, rep.retried, rep.speculated, rep.speculation_wins,
+            rep.bytes_local, rep.bytes_moved, rep.partitioned_records,
+            pytest.approx(rep.sim_seconds),
+            [pytest.approx(s) for s in rep.stage_seconds])
+
+
+def _run_both_backends(tmp_path, n, make_job, *, speeds=None, kill=None):
+    reports, outputs = {}, {}
+    for backend in ("bytes", "array"):
+        sub = tmp_path / backend
+        sub.mkdir()
+        master, servers, client = make_cloud(sub, chunk_size=1000)
+        data = _upload(client, "f", n=n, replication=3)
+        if kill is not None:
+            servers[kill].kill()
+            master.deregister(servers[kill].server_id)
+        eng = SphereEngine(master, client, speeds=speeds)
+        outs, rep = eng.run(make_job(backend, data))
+        reports[backend] = rep
+        outputs[backend] = outs
+    return reports, outputs
+
+
+def test_report_counters_agree_across_backends(tmp_path):
+    """Same TeraSort job on both backends: byte-identical outputs AND an
+    identical scheduling report — locality, movement (charged from real
+    shuffle origins), speculation and simulated time all match because
+    the planner is pure over task sizes."""
+    def make_job(backend, data):
+        sample = [data[i:i + REC] for i in range(0, 100 * REC, REC)]
+        bounds = sample_boundaries(sample, 4, key_bytes=10)
+        return SphereJob("sort", "f", terasort_stages(bounds, backend, 4),
+                         record_size=REC, backend=backend)
+
+    reports, outputs = _run_both_backends(tmp_path, 100, make_job)
+    assert outputs["bytes"] == outputs["array"]
+    assert _report_key(reports["array"]) == _report_key(reports["bytes"])
+    assert reports["bytes"].sim_seconds > 0
+    assert reports["bytes"].bytes_moved > 0  # the shuffle moved something
+
+
+def test_report_counters_agree_with_failure(tmp_path):
+    """Retry counters agree too: chunk reads hit the same dead replicas
+    on both backends."""
+    reports, outputs = _run_both_backends(
+        tmp_path, 60, lambda backend, data: _identity_job(backend), kill=1)
+    assert outputs["bytes"] == outputs["array"]
+    assert _report_key(reports["array"]) == _report_key(reports["bytes"])
+
+
+def test_array_udf_traced_once_per_stage(tmp_path):
+    """Pad-stable stage UDFs compile once: every task is padded to the
+    same block multiple, so rep.udf_traces reports 1 per stage."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    data = _upload(client, "f", n=120, replication=2)
+    sample = [data[i:i + REC] for i in range(0, 120 * REC, REC)]
+    bounds = sample_boundaries(sample, 4, key_bytes=10)
+    job = SphereJob("sort", "f", terasort_stages(bounds, "array", 4),
+                    record_size=REC, backend="array")
+    _, rep = SphereEngine(master, client).run(job)
+    assert rep.udf_traces == {"partition": 1, "sort": 1}
+
+
+def test_array_terasort_stays_on_kernel_path(tmp_path, monkeypatch):
+    """10-byte range splitters must take the multi-word kernel — the
+    per-record host fallback would be a silent perf regression, so make
+    it an error for the whole job."""
+    import repro.core.shuffle as shuffle_mod
+
+    def boom(*a, **k):
+        raise AssertionError("RangePartitioner fell back to _host_partition")
+
+    monkeypatch.setattr(shuffle_mod, "_host_partition", boom)
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    data = _upload(client, "f", n=100, replication=2)
+    sample = [data[i:i + REC] for i in range(0, 100 * REC, REC)]
+    bounds = sample_boundaries(sample, 4, key_bytes=10)
+    assert len(bounds[0]) == 10
+    job = SphereJob("sort", "f", terasort_stages(bounds, "array", 4),
+                    record_size=REC, backend="array")
+    outs, rep = SphereEngine(master, client).run(job)
+    allrec = [r for blob in outs
+              for r in (blob[i:i + REC] for i in range(0, len(blob), REC))]
+    keys = [r[:10] for r in allrec]
+    assert keys == sorted(keys) and len(allrec) == 100
+
+
+def test_same_named_stages_keep_their_own_udfs(tmp_path):
+    """The traced-UDF cache is keyed by stage identity, not name — two
+    pad-stable stages sharing a name must each run their own batch_udf."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    rng = np.random.default_rng(3)
+    vals = rng.integers(0, 100, size=50).astype("<u4")
+    client.upload("nums", vals.tobytes(), replication=2)
+
+    def add(k):
+        return lambda b: type(b)(b.data + np.uint8(k))
+
+    job = SphereJob("dup", "nums", [
+        SphereStage("x", batch_udf=add(1), pad_value=0),
+        SphereStage("x", batch_udf=add(2), pad_value=0),
+    ], record_size=4, backend="array")
+    outs, _ = SphereEngine(master, client).run(job)
+    got = np.sort(np.frombuffer(b"".join(outs), np.uint8))
+    want = np.sort((np.frombuffer(vals.tobytes(), np.uint8) + 3)
+                   .astype(np.uint8))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pad_unstable_udf_is_rejected(tmp_path):
+    """A batch_udf that changes the row count while declaring pad_value
+    violates the pad-stability contract and must fail loudly."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    _upload(client, "f", n=20, replication=2)
+    job = SphereJob("bad", "f",
+                    [SphereStage("halve",
+                                 batch_udf=lambda b: b.take(
+                                     np.arange(b.num_records // 2)),
+                                 pad_value=0xFF)],
+                    record_size=REC, backend="array")
+    with pytest.raises(ValueError, match="pad-stable"):
+        SphereEngine(master, client).run(job)

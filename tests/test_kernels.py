@@ -81,3 +81,50 @@ def test_bucket_partition_sweep(N, nb, bn):
     assert (np.asarray(ids) == np.asarray(idr)).all()
     assert (np.asarray(hist) == np.asarray(histr)).all()
     assert int(hist.sum()) == N
+
+
+@pytest.mark.parametrize("k", [2, 3, 4])
+@pytest.mark.parametrize("N,nb,bn", [(100, 4, 32), (777, 8, 256)])
+def test_bucket_partition_multiword_sweep(N, nb, bn, k):
+    """[N, k] key rows vs [nb-1, k] boundary rows: the kernel's word-by-
+    word lexicographic compare against the big-int oracle. Low word
+    entropy (values 0..3) forces constant prefix ties so later words and
+    the strict-< rule actually decide buckets."""
+    keys = jax.random.randint(jax.random.PRNGKey(7 + k), (N, k), 0, 4,
+                              dtype=jnp.uint32)
+    bounds = jax.random.randint(jax.random.PRNGKey(8 + k), (nb - 1, k), 0, 4,
+                                dtype=jnp.uint32)
+    order = np.lexsort(np.asarray(bounds).T[::-1])
+    bounds = jnp.asarray(np.asarray(bounds)[order])
+    ids, hist = bucket_partition(keys, bounds, n_buckets=nb, block_n=bn,
+                                 interpret=True)
+    idr, histr = bucket_partition_ref(keys, bounds, nb)
+    assert (np.asarray(ids) == np.asarray(idr)).all()
+    assert (np.asarray(hist) == np.asarray(histr)).all()
+    assert int(hist.sum()) == N
+
+
+def test_bucket_partition_equal_keys_are_strict():
+    """bucket id = #{bounds < key} is STRICT: a key equal to a boundary
+    belongs to the bucket below it, in both the single- and multi-word
+    kernels and the oracle."""
+    bounds = jnp.array([10, 20], jnp.uint32)
+    keys = jnp.array([10, 20, 9, 11, 21], jnp.uint32)
+    ids, hist = bucket_partition(keys, bounds, n_buckets=3, block_n=8,
+                                 interpret=True)
+    assert np.asarray(ids).tolist() == [0, 1, 0, 1, 2]
+    idr, _ = bucket_partition_ref(keys, bounds, 3)
+    assert np.asarray(idr).tolist() == [0, 1, 0, 1, 2]
+    bounds2 = jnp.array([[1, 10], [1, 20]], jnp.uint32)
+    keys2 = jnp.array([[1, 10], [1, 20], [0, 99], [1, 11], [2, 0]],
+                      jnp.uint32)
+    ids2, _ = bucket_partition(keys2, bounds2, n_buckets=3, block_n=8,
+                               interpret=True)
+    assert np.asarray(ids2).tolist() == [0, 1, 0, 1, 2]
+
+
+def test_bucket_partition_word_count_mismatch():
+    with pytest.raises(ValueError, match="words per row"):
+        bucket_partition(jnp.zeros((4, 2), jnp.uint32),
+                         jnp.zeros((3, 3), jnp.uint32), n_buckets=4,
+                         interpret=True)

@@ -1,0 +1,101 @@
+"""Pure-planner unit tests: scheduling behaviour with no Sector cloud.
+
+The planner/executor split makes the control plane testable in
+isolation — these tests drive SpherePlanner with synthetic tasks, speeds
+and link costs and assert on the StagePlan alone."""
+import pytest
+
+from repro.core.planner import (PROCESS_RATE, SpherePlanner, TaskSpec)
+
+
+def _tasks(sizes, locs):
+    return [TaskSpec(f"c{i}", nb, tuple(ls))
+            for i, (nb, ls) in enumerate(zip(sizes, locs))]
+
+
+def test_locality_preferred_zero_movement():
+    p = SpherePlanner(move_time=lambda nb, s, d: 99.0)
+    plan = p.plan_stage(_tasks([100, 200, 300],
+                               [("a",), ("b",), ("a", "b")]),
+                        ["a", "b"])
+    assert plan.bytes_moved == 0
+    assert plan.bytes_local == 600
+    for t in plan.tasks:
+        assert t.worker in t.locs
+
+
+def test_no_replica_moves_to_least_loaded():
+    moves = []
+
+    def move_time(nb, s, d):
+        moves.append((nb, s, d))
+        return 0.01
+
+    p = SpherePlanner(move_time=move_time)
+    plan = p.plan_stage(_tasks([500], [()]), ["a", "b"])
+    assert plan.bytes_moved == 500 and plan.bytes_local == 0
+    assert len(moves) == 1
+
+
+def test_load_spreads_across_workers():
+    """Many equal tasks replicated everywhere spread evenly: est-ready
+    greedy never stacks a worker while another is idle."""
+    n = 8
+    p = SpherePlanner()
+    plan = p.plan_stage(_tasks([100] * n, [("a", "b")] * n), ["a", "b"])
+    per = {"a": 0, "b": 0}
+    for t in plan.tasks:
+        per[t.worker] += 1
+    assert per == {"a": n // 2, "b": n // 2}
+
+
+def test_speculation_wins_on_fast_replica():
+    """A 50x-slow worker holding replicas gets tasks queued on it (the
+    scheduler estimates uniform speeds); speculation must re-run the
+    stragglers on the fast replica and the winner is recorded as the
+    executor."""
+    p = SpherePlanner(speeds={"slow": 0.02, "fast": 1.0},
+                      speculate_factor=1.5)
+    plan = p.plan_stage(_tasks([1000] * 40, [("slow", "fast")] * 40),
+                        ["slow", "fast"])
+    assert plan.speculated > 0
+    assert plan.speculation_wins > 0
+    rerouted = [t for t in plan.tasks if t.executor != t.worker]
+    assert rerouted and all(t.executor == "fast" and t.worker == "slow"
+                            for t in rerouted)
+
+
+def test_plan_is_deterministic_and_pure():
+    speeds = {"a": 0.5}
+    tasks = _tasks([300, 100, 200, 100], [("a",), ("b",), (), ("a", "b")])
+    p1 = SpherePlanner(speeds=speeds, move_time=lambda nb, s, d: nb / 1e6)
+    p2 = SpherePlanner(speeds=speeds, move_time=lambda nb, s, d: nb / 1e6)
+    assert p1.plan_stage(tasks, ["a", "b"]) == p1.plan_stage(tasks, ["a", "b"])
+    assert p1.plan_stage(tasks, ["a", "b"]) == p2.plan_stage(tasks, ["a", "b"])
+
+
+def test_stage_seconds_scale_with_speed():
+    tasks = _tasks([PROCESS_RATE], [("a",)])  # 1 second on a speed-1 worker
+    fast = SpherePlanner().plan_stage(tasks, ["a"])
+    slow = SpherePlanner(speeds={"a": 0.5}).plan_stage(tasks, ["a"])
+    assert fast.seconds == pytest.approx(1.0)
+    assert slow.seconds == pytest.approx(2.0)
+
+
+def test_empty_stage_plan():
+    plan = SpherePlanner().plan_stage([], ["a"])
+    assert plan.tasks == () and plan.seconds == 0.0
+
+
+def test_shuffle_charges_actual_origins():
+    """Local fragments are free; remote fragments are charged per flow and
+    the shuffle completes when the slowest flow lands."""
+    p = SpherePlanner(move_time=lambda nb, s, d: nb / 100.0)
+    flows = [("a", "a", 500),   # stays put: local, no time
+             ("b", "a", 200),
+             ("a", "b", 400),
+             ("b", "b", 0)]     # empty fragment: ignored
+    seconds, moved, local = p.plan_shuffle(flows)
+    assert local == 500
+    assert moved == 600
+    assert seconds == pytest.approx(4.0)  # slowest flow (400 bytes)

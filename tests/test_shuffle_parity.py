@@ -53,13 +53,16 @@ def test_hash_partitioner_parity(n_records, record_size, n_buckets):
     _assert_parity(records, blob, record_size, part, n_buckets)
 
 
+@pytest.mark.parametrize("key_bytes", [4, 10])
 @pytest.mark.parametrize("n_buckets", [1, 2, 6, 16])
 @pytest.mark.parametrize("n_records,record_size", [
     (1, 8), (97, 100), (333, 10), (1000, 100)])
-def test_range_partitioner_parity(n_records, record_size, n_buckets):
+def test_range_partitioner_parity(n_records, record_size, n_buckets,
+                                  key_bytes):
     blob, records = _random_records(n_records, record_size,
                                     seed=7 * n_records + n_buckets)
-    bounds = sample_boundaries(records[:200], n_buckets, key_bytes=4)
+    bounds = sample_boundaries(records[:200], n_buckets,
+                               key_bytes=key_bytes)
     part = range_partitioner(bounds)
     _assert_parity(records, blob, record_size, part, n_buckets)
 
@@ -94,6 +97,59 @@ def test_duplicate_and_boundary_keys():
     records = [k + b"pad-data" for k in keys]
     blob = b"".join(records)
     _assert_parity(records, blob, 12, part, 3)
+
+
+def test_duplicate_and_boundary_keys_multiword():
+    """Same strictness torture on 10-byte (3-word) boundaries: keys equal
+    to a boundary, keys differing only in the zero-padded tail word, and
+    duplicates — each must land identically on both paths."""
+    b1 = b"\x40" * 10
+    b2 = b"\x80" * 9 + b"\x00"
+    part = range_partitioner([b1, b2])
+    keys = ([b1] * 4                        # == boundary 1
+            + [b1[:9] + b"\x3f"] * 3        # just below, tail word only
+            + [b1[:9] + b"\x41"] * 3        # just above, tail word only
+            + [b2] * 4 + [b2[:9] + b"\x01"] * 2
+            + [b"\x00" * 10] * 2 + [b"\xff" * 10] * 2)
+    records = [k + b"pp" for k in keys]
+    _assert_parity(records, b"".join(records), 12, part, 3)
+
+
+def test_multiword_padded_tail_blocks():
+    """Multi-word keys through the kernel's padded-tail path: block_n not
+    dividing n_records must not leak padded rows into ids/histogram."""
+    n, rec, nb = 101, 16, 4
+    blob, records = _random_records(n, rec, seed=23)
+    bounds = sample_boundaries(records, nb, key_bytes=10)
+    part = range_partitioner(bounds)
+    for block_n in (7, 32, 100, 101, 4096):
+        _assert_parity(records, blob, rec, part, nb, block_n=block_n)
+
+
+def test_variable_length_boundaries_exact():
+    """Boundaries of differing lengths, including one that is a strict
+    prefix of another with a zero tail — Python's shorter-prefix-sorts-
+    first rule, reproduced on the kernel by the trailing length word."""
+    bounds = [b"\x10\x20", b"\x10\x20\x00", b"\x10\x20\x00\x00\x00\x01",
+              b"\x90\x10\x20\x30\x40"]
+    part = range_partitioner(bounds)
+    prefixes = [b"\x00\x00", b"\x10\x1f", b"\x10\x20", b"\x10\x21",
+                b"\x90\x10", b"\xff\xff"]
+    records = [p + bytes([i]) * 4 for i, p in enumerate(prefixes)]
+    records += [b"\x10\x20\x00\x00\x00\x00", b"\x10\x20\x00\x00\x00\x01",
+                b"\x90\x10\x20\x30\x40\x00"]
+    _assert_parity(records, b"".join(records), 6, part, 5)
+
+
+def test_records_shorter_than_boundaries():
+    """record_size < boundary length: the comparison key is the whole
+    (shorter) record, which ties with longer boundaries sharing its
+    prefix — the length word must break the tie exactly like bytes."""
+    bounds = [b"\x20\x20\x20\x20\x00\x00", b"\x80\x80\x80\x80\x80\x80"]
+    part = range_partitioner(bounds)
+    records = [b"\x20\x20\x20\x20", b"\x20\x20\x20\x21", b"\x00\x00\x00\x00",
+               b"\x80\x80\x80\x80", b"\xff\xff\xff\xff"]
+    _assert_parity(records, b"".join(records), 4, part, 3)
 
 
 def test_custom_callable_partitioner_fallback():
@@ -138,19 +194,25 @@ def test_sort_by_key_stable_ignores_payload():
         assert got == sorted(records, key=lambda r: r[:kb])
 
 
-def test_long_boundaries_fall_back_to_host_loop():
-    """Boundaries longer than 4 bytes can't use the uint32 kernel
-    compare — bucket_ids must still match the bytes path exactly
-    (records sharing a 4-byte prefix, differing past it)."""
+def test_long_boundaries_take_multiword_kernel_path(monkeypatch):
+    """Boundaries longer than 4 bytes go through the kernel's multi-word
+    lexicographic compare (NOT the per-record host fallback) and must
+    match the bytes path exactly — records here share a 4-byte prefix
+    and differ only past it, so a truncating single-word compare would
+    collapse them all into bucket 0."""
+    import repro.core.shuffle as shuffle_mod
+
+    def boom(*a, **k):
+        raise AssertionError("range bucket_ids used _host_partition")
+
+    monkeypatch.setattr(shuffle_mod, "_host_partition", boom)
     prefix = b"\x10\x20\x30\x40"
     records = [prefix + bytes([i]) + b"x" * 5 for i in range(20)]
     blob = b"".join(records)
     bounds = sample_boundaries(records, 4, key_bytes=10)
-    assert len(bounds[0]) > 4  # the case the kernel cannot express
+    assert len(bounds[0]) > 4
     part = range_partitioner(bounds)
     _assert_parity(records, blob, 10, part, 4)
-    # the bytes path spreads these across buckets; a 4-byte-truncating
-    # kernel would have collapsed them all into bucket 0
     assert len({part(r, 4) for r in records}) > 1
 
 
@@ -182,8 +244,10 @@ if hypothesis is not None:
            rec_pow=st.integers(2, 5),
            n_buckets=st.integers(1, 9),
            which=st.sampled_from(["hash", "range"]),
+           bound_len=st.integers(1, 12),
            seed=st.integers(0, 2**31 - 1))
-    def test_parity_property(data, rec_pow, n_buckets, which, seed):
+    def test_parity_property(data, rec_pow, n_buckets, which, bound_len,
+                             seed):
         rec = 1 << rec_pow
         n = max(1, len(data) // rec)
         blob = (data + bytes(n * rec))[:n * rec]
@@ -191,7 +255,43 @@ if hypothesis is not None:
         if which == "hash":
             part = hash_partitioner(key_bytes=min(rec, 8))
         else:
+            # boundaries up to 12 bytes (multi-word kernel path), biased
+            # toward collisions with record prefixes and toward the
+            # duplicate / boundary-equal / zero-tail cases
             rng = np.random.default_rng(seed)
-            raw = [rng.bytes(4) for _ in range(max(n_buckets - 1, 0))]
+            raw = []
+            for _ in range(max(n_buckets - 1, 0)):
+                if records and rng.random() < 0.5:
+                    b = records[rng.integers(len(records))][:bound_len]
+                    if rng.random() < 0.3:
+                        b = b[:max(1, bound_len // 2)] + b"\x00"
+                else:
+                    b = rng.bytes(bound_len)
+                raw.append(b)
             part = range_partitioner(sorted(raw))
         _assert_parity(records, blob, rec, part, n_buckets, block_n=37)
+
+
+def test_parity_randomized_multiword():
+    """Non-hypothesis twin of the property test (runs even without the
+    hypothesis dev dep): random records vs random variable-length
+    boundaries seeded from record prefixes, 60 rounds."""
+    rng = np.random.default_rng(42)
+    for _ in range(60):
+        rec = int(rng.integers(4, 33))
+        n = int(rng.integers(1, 80))
+        blob = rng.bytes(n * rec)
+        records = [blob[i:i + rec] for i in range(0, n * rec, rec)]
+        nb = int(rng.integers(1, 9))
+        bound_len = int(rng.integers(1, 13))
+        raw = []
+        for _ in range(nb - 1):
+            if rng.random() < 0.5:
+                b = records[rng.integers(len(records))][:bound_len]
+                if rng.random() < 0.3:
+                    b = b[:max(1, bound_len // 2)] + b"\x00"
+            else:
+                b = rng.bytes(bound_len)
+            raw.append(b)
+        part = range_partitioner(sorted(raw))
+        _assert_parity(records, blob, rec, part, nb, block_n=37)

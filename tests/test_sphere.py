@@ -122,6 +122,20 @@ def test_range_partitioner_boundaries():
     assert max(counts) - min(counts) <= 30
 
 
+def test_sample_boundaries_more_buckets_than_records():
+    """n_buckets > len(records) used to wrap int(step*i) - 1 to -1 and
+    emit the LARGEST key first — unsorted, duplicated boundaries. The
+    clamped index keeps them sorted (tail buckets just stay empty)."""
+    recs = [bytes([i]) * 10 for i in (5, 1, 9)]
+    bounds = sample_boundaries(recs, 8, key_bytes=10)
+    assert len(bounds) == 8 - 1
+    assert bounds == sorted(bounds)
+    assert bounds[0] == bytes([1]) * 10  # smallest key, not the largest
+    part = range_partitioner(bounds)
+    ids = [part(r, 8) for r in sorted(recs)]
+    assert ids == sorted(ids)
+
+
 # ------------------------- array record backend ---------------------------
 
 def test_array_backend_terasort_matches_bytes(tmp_path):
@@ -130,7 +144,7 @@ def test_array_backend_terasort_matches_bytes(tmp_path):
     rec, n = 100, 200
     data = _upload_records(client, "f", n=n, rec=rec, replication=2)
     sample = [data[i:i + rec] for i in range(0, n * rec, rec)]
-    bounds = sample_boundaries(sample, 4, key_bytes=4)
+    bounds = sample_boundaries(sample, 4, key_bytes=10)
 
     results = {}
     for backend in ("bytes", "array"):
