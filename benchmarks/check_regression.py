@@ -30,6 +30,14 @@ WATCHED = [
      ("result", "host", "sphere_array", "partition_rec_per_s"), "abs"),
     ("BENCH_table3_terasort.json",
      ("result", "host", "speedup"), "ratio"),
+    # k-means session path: steady-state per-iteration throughput and the
+    # session-vs-per-iteration-rebuild speedup (one planner/lookup/trace
+    # for the whole chain) — gated like partitioning so iteration stays
+    # the fast path
+    ("BENCH_table2_kmeans.json",
+     ("result", "kmeans", "session_iter_rec_per_s"), "abs"),
+    ("BENCH_table2_kmeans.json",
+     ("result", "kmeans", "session_speedup"), "ratio"),
 ]
 
 

@@ -1,14 +1,24 @@
 """Table 2 — Sphere k-means scaling with record count (paper §5.3).
 
 The paper clusters 500 .. 1e8 points over distributed pcap-feature files;
-time scales near-linearly in records. We run the same Sphere job at CPU-
-feasible sizes, report simulated wall time (the engine's deterministic cost
-model over the Teraflow topology) plus real UDF execution, and fit the
+time scales near-linearly in records. We run the same Sphere job chain at
+CPU-feasible sizes, report simulated wall time (the engine's deterministic
+cost model over the Teraflow topology) plus real UDF execution, and fit the
 scaling exponent (paper: ~1 = linear).
 
-Runs on both record backends: ``bytes`` loops per chunk in numpy, ``array``
-packs points into RecordBatches and runs one jitted assign UDF per chunk
-batch. Both must converge to the same centroids (same seed, same data).
+Three paths per size, all converging to the same centroids (same seed,
+same data):
+
+* ``bytes`` — per-chunk numpy reference through a session;
+* ``array`` rebuild — the pre-session baseline: every iteration re-plans
+  (fresh lookup/planner/executor) and re-traces the stage UDFs;
+* ``array`` session — one :class:`SphereSession` chains all iterations:
+  one lookup, one stage-0 plan, chunks decoded once, mask-aware
+  reduction UDFs traced once for the whole run (``udf_traces == 1``).
+
+The ``kmeans`` summary block (largest size) feeds the CI regression
+gate: steady-state per-iteration throughput and the session-vs-rebuild
+speedup, plus the per-iteration wall clock lists in each row.
 """
 from __future__ import annotations
 
@@ -26,6 +36,7 @@ SIZES = [500, 5_000, 50_000, 500_000]
 SMOKE_SIZES = [500, 5_000]
 DIM = 8
 K = 10
+ITERS = 5  # >= 3: iteration 1 pays the traces, the rest are steady-state
 
 
 def _make_cloud():
@@ -39,32 +50,55 @@ def _make_cloud():
     return master, client
 
 
-def run(sizes=SIZES) -> list:
+def _run_kmeans(pts, backend, session, iter_seconds=None):
+    master, client = _make_cloud()
+    client.upload("pts", encode_points(pts), replication=2)
+    eng = SphereEngine(master, client)
+    t0 = time.time()
+    c, rep = kmeans_sphere(eng, "pts", dim=DIM, k=K, iters=ITERS,
+                           backend=backend, session=session,
+                           iter_seconds=iter_seconds)
+    return c, rep, time.time() - t0, master
+
+
+def run(sizes=SIZES) -> dict:
     rows = []
     for n in sizes:
         pts = np.random.default_rng(0).normal(size=(n, DIM)) \
             .astype(np.float32)
         row = {"records": n}
-        cents = {}
-        for backend in ("bytes", "array"):
-            master, client = _make_cloud()
-            client.upload("pts", encode_points(pts), replication=2)
-            eng = SphereEngine(master, client)
-            t0 = time.time()
-            c, rep = kmeans_sphere(eng, "pts", dim=DIM, k=K, iters=3,
-                                   backend=backend)
-            cents[backend] = c
-            row.update({
-                "sector_files": master.stats()["chunks"],
-                f"{backend}_sim_seconds": round(rep.sim_seconds, 4),
-                f"{backend}_real_seconds": round(time.time() - t0, 3),
-                "locality": round(rep.locality_fraction, 3),
-            })
-        np.testing.assert_allclose(cents["bytes"], cents["array"],
-                                   rtol=1e-3, atol=1e-3)
-        row["udf_speedup"] = round(row["bytes_real_seconds"]
-                                   / max(row["array_real_seconds"], 1e-9), 2)
+
+        c_bytes, rep_b, t_bytes, master = _run_kmeans(pts, "bytes", True)
+        row.update({
+            "sector_files": master.stats()["chunks"],
+            "bytes_sim_seconds": round(rep_b.sim_seconds, 4),
+            "bytes_real_seconds": round(t_bytes, 3),
+            "locality": round(rep_b.locality_fraction, 3),
+        })
+
+        # pre-session baseline: re-plan + re-trace every iteration
+        c_rebuild, _, t_rebuild, _ = _run_kmeans(pts, "array", False)
+        # the session chain: one plan, one trace, device-resident chunks
+        iter_s: list = []
+        c_sess, rep_s, t_sess, _ = _run_kmeans(pts, "array", True, iter_s)
+        steady = iter_s[1:] or iter_s  # drop the trace-paying first iter
+        # best steady-state iteration: min is far less noisy than mean at
+        # smoke scale (ms-long iterations, host-dispatch jitter), which
+        # is what the CI regression gate needs
+        row.update({
+            "array_sim_seconds": round(rep_s.sim_seconds, 4),
+            "array_rebuild_seconds": round(t_rebuild, 3),
+            "array_real_seconds": round(t_sess, 3),
+            "array_iter_seconds": [round(s, 4) for s in iter_s],
+            "session_iter_rec_per_s": int(n / max(min(steady), 1e-9)),
+            "session_speedup": round(t_rebuild / max(t_sess, 1e-9), 2),
+            "udf_traces": dict(rep_s.udf_traces),
+            "udf_speedup": round(t_bytes / max(t_sess, 1e-9), 2),
+        })
+        np.testing.assert_allclose(c_bytes, c_sess, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(c_rebuild, c_sess, rtol=1e-4, atol=1e-4)
         rows.append(row)
+
     # scaling exponent of real UDF compute between the two largest sizes
     # (paper Table 2 is linear-in-records: 1e6 -> 1e8 records is 60x time).
     # sim_seconds stays near-flat until records saturate the 6-site cluster
@@ -76,18 +110,32 @@ def run(sizes=SIZES) -> list:
             / np.log(b["records"] / a["records"]))
     for r in rows:
         r["scaling_exponent_tail"] = round(float(expo), 2)
-    return rows
+
+    # regression-gate summary from the largest size: session iteration
+    # throughput (abs) and session-vs-rebuild speedup (ratio)
+    tail = rows[-1]
+    return {
+        "rows": rows,
+        "kmeans": {
+            "session_iter_rec_per_s": tail["session_iter_rec_per_s"],
+            "session_speedup": tail["session_speedup"],
+            "udf_traces": tail["udf_traces"],
+        },
+    }
 
 
-def main(smoke: bool = False) -> list:
-    rows = run(SMOKE_SIZES if smoke else SIZES)
+def main(smoke: bool = False) -> dict:
+    result = run(SMOKE_SIZES if smoke else SIZES)
     cols = ["records", "sector_files", "bytes_sim_seconds",
-            "bytes_real_seconds", "array_real_seconds", "udf_speedup",
-            "locality", "scaling_exponent_tail"]
+            "bytes_real_seconds", "array_rebuild_seconds",
+            "array_real_seconds", "session_speedup",
+            "session_iter_rec_per_s", "udf_speedup", "locality",
+            "scaling_exponent_tail"]
     print(",".join(cols))
-    for r in rows:
+    for r in result["rows"]:
         print(",".join(str(r[c]) for c in cols))
-    return rows
+    print(f'kmeans gate: {result["kmeans"]}')
+    return result
 
 
 if __name__ == "__main__":

@@ -6,8 +6,11 @@ analysis of the per-window cluster models flags anomalous behaviour.
 
     PYTHONPATH=src python examples/angle_kmeans.py [--backend {array,bytes}]
 
-``--backend array`` (default) clusters each window with the jitted
-RecordBatch UDF; ``--backend bytes`` is the per-chunk numpy reference.
+``--backend array`` (default) clusters each window with the mask-aware
+RecordBatch UDFs; ``--backend bytes`` is the per-chunk numpy reference.
+Each window's iterations chain through one :class:`SphereSession` — one
+Sector lookup and one traced UDF pair per window, however many k-means
+iterations run over it.
 """
 import argparse
 import tempfile
@@ -36,6 +39,9 @@ client = SectorClient(master, "angle", "chicago")
 rng = np.random.default_rng(0)
 normal_centers = rng.normal(size=(K, DIM)) * 3
 
+engine = SphereEngine(master, client)
+record_size = 4 * DIM if backend == "array" else 0
+
 # windows 0..5 are normal traffic; 6-7 contain an injected anomaly cluster
 models = []
 for w in range(WINDOWS):
@@ -43,16 +49,16 @@ for w in range(WINDOWS):
         rng.normal(c, 0.4, size=(400, DIM)) for c in normal_centers])
     if w >= 6:  # suspicious behaviour: a new tight cluster far away
         pts = np.concatenate([pts, rng.normal(12.0, 0.2, size=(150, DIM))])
-    client.upload(f"angle/window_{w:03d}.f32",
-                  encode_points(pts.astype(np.float32)), replication=2)
-    cents, rep = kmeans_sphere(SphereEngine(master, client),
-                               f"angle/window_{w:03d}.f32",
+    file = f"angle/window_{w:03d}.f32"
+    client.upload(file, encode_points(pts.astype(np.float32)), replication=2)
+    session = engine.session(file, record_size=record_size, backend=backend)
+    cents, rep = kmeans_sphere(engine, file,
                                dim=DIM, k=K + 1, iters=6, seed=1,
-                               backend=backend)
+                               backend=backend, session=session)
     models.append(cents)
-    print(f"window {w}: clustered "
+    print(f"window {w}: clustered in {session.jobs_run} chained jobs "
           f"(locality {rep.locality_fraction:.0%}, "
-          f"sim {rep.sim_seconds:.2f}s)")
+          f"sim {rep.sim_seconds:.2f}s, traces {dict(rep.udf_traces)})")
 
 # temporal analysis: alert when a window's cluster model drifts
 baseline = np.stack(models[:4]).mean(0)

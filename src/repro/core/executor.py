@@ -43,10 +43,21 @@ Origins = List[Dict[str, int]]
 
 
 class _ExecutorBase:
-    def __init__(self, client, workers: Sequence[str], max_retries: int = 3):
+    def __init__(self, client, workers: Sequence[str], max_retries: int = 3,
+                 cache_chunks: bool = False):
         self.client = client
         self.workers = list(workers)
         self.max_retries = max_retries
+        # session mode: stage-0 chunks, once fetched and decoded, stay
+        # resident (bytes: record lists; array: device RecordBatches) so
+        # a chain of jobs over the same file pays the host round-trip
+        # exactly once.  Keyed by chunk id; cleared by session.refresh().
+        self._chunk_cache: Optional[Dict[str, object]] = \
+            {} if cache_chunks else None
+
+    def clear_chunk_cache(self) -> None:
+        if self._chunk_cache is not None:
+            self._chunk_cache.clear()
 
     def _fetch_chunk(self, key: str, rep: SphereReport) -> Optional[bytes]:
         """Read a stage-0 chunk, retrying over surviving replicas."""
@@ -58,6 +69,20 @@ class _ExecutorBase:
                 self.client.run_repair()
         return None
 
+    def _stage0_input(self, job: SphereJob, key: str, rep: SphereReport):
+        """Decoded stage-0 input for one chunk task, through the session
+        chunk cache when enabled.  Returns None when every replica is
+        gone."""
+        if self._chunk_cache is not None and key in self._chunk_cache:
+            return self._chunk_cache[key]
+        blob = self._fetch_chunk(key, rep)
+        if blob is None:
+            return None
+        decoded = self._decode_chunk(job, blob)
+        if self._chunk_cache is not None:
+            self._chunk_cache[key] = decoded
+        return decoded
+
 
 class BytesExecutor(_ExecutorBase):
     """Reference data plane: partitions are lists of Python bytes."""
@@ -68,16 +93,22 @@ class BytesExecutor(_ExecutorBase):
     def part_sizes(self, parts) -> Dict[str, int]:
         return {w: sum(len(r) for r in parts[w]) for w in self.workers}
 
+    def _decode_chunk(self, job: SphereJob, blob: bytes) -> List[bytes]:
+        return job.split_records(blob)
+
     def run_stage(self, job: SphereJob, stage: SphereStage, plan: StagePlan,
                   parts, rep: SphereReport, *, first_stage: bool
                   ) -> Dict[str, List[bytes]]:
         out: Dict[str, List[bytes]] = {w: [] for w in self.workers}
         for t in plan.tasks:
             if first_stage:
-                blob = self._fetch_chunk(t.key, rep)
-                if blob is None:
+                records = self._stage0_input(job, t.key, rep)
+                if records is None:
                     continue
-                records = job.split_records(blob)
+                if self._chunk_cache is not None:
+                    # hand UDFs a copy: an in-place-mutating UDF (sort,
+                    # pop) must not corrupt the cache for later jobs
+                    records = list(records)
             else:
                 records = parts.get(t.key)
                 if not records:
@@ -115,36 +146,48 @@ class BytesExecutor(_ExecutorBase):
 
 
 class _TracedUDF:
-    """jit wrapper around a batch UDF that counts trace events — the
-    trace-time side effect fires once per distinct input shape, so
-    ``traces == 1`` certifies the stage compiled exactly once."""
+    """jit wrapper around a batch (or mask-aware) UDF that counts trace
+    events — the trace-time side effect fires once per distinct input
+    shape, so ``traces == 1`` certifies the stage compiled exactly once.
 
-    def __init__(self, name: str, udf):
+    Masked mode jits ``(data, n_valid, params)`` with n_valid and the
+    params pytree as *dynamic* arguments: every task of the stage — and
+    every re-run of the stage across a chained session (e.g. k-means
+    iterations with fresh centroids in ``params``) — shares one trace."""
+
+    def __init__(self, name: str, udf, *, masked: bool = False):
         self.name = name
         self.udf = udf
         self.traces = 0
-        self._jit = jax.jit(self._call)
+        self._jit = jax.jit(self._call_masked if masked else self._call)
 
-    def _call(self, data: jax.Array) -> jax.Array:
-        self.traces += 1
-        out = self.udf(RecordBatch(data))
+    def _check(self, out) -> jax.Array:
         if not isinstance(out, RecordBatch):
-            raise TypeError(f"stage {self.name!r} batch_udf must return "
+            raise TypeError(f"stage {self.name!r} UDF must return "
                             f"a RecordBatch, got {type(out).__name__}")
         return out.data
 
-    def __call__(self, data: jax.Array) -> jax.Array:
-        return self._jit(data)
+    def _call(self, data: jax.Array) -> jax.Array:
+        self.traces += 1
+        return self._check(self.udf(RecordBatch(data)))
+
+    def _call_masked(self, data: jax.Array, n_valid, params) -> jax.Array:
+        self.traces += 1
+        mask = jnp.arange(data.shape[0], dtype=jnp.int32) < n_valid
+        return self._check(self.udf(RecordBatch(data), mask, params))
+
+    def __call__(self, *args) -> jax.Array:
+        return self._jit(*args)
 
 
 class ArrayExecutor(_ExecutorBase):
     """Device-resident data plane: one RecordBatch per worker partition."""
 
     def __init__(self, client, workers: Sequence[str], max_retries: int = 3,
-                 pad_block: int = 4096):
-        super().__init__(client, workers, max_retries)
+                 pad_block: int = 4096, cache_chunks: bool = False):
+        super().__init__(client, workers, max_retries,
+                         cache_chunks=cache_chunks)
         self.pad_block = pad_block
-        self._traced: Dict[int, _TracedUDF] = {}
 
     def empty_parts(self) -> Dict[str, Optional[RecordBatch]]:
         return {w: None for w in self.workers}
@@ -153,25 +196,50 @@ class ArrayExecutor(_ExecutorBase):
         return {w: (parts[w].nbytes if parts[w] is not None else 0)
                 for w in self.workers}
 
+    def _decode_chunk(self, job: SphereJob, blob: bytes) -> RecordBatch:
+        return job.split_batch(blob)
+
     # --------------------------------------------------------- UDF apply
-    def _apply_padded(self, stage: SphereStage, batch: RecordBatch,
-                      target: int, rep: SphereReport) -> RecordBatch:
-        # keyed by stage identity, not name: same-named stages must not
-        # share a traced UDF (the name is only the report label)
-        traced = self._traced.get(id(stage))
-        if traced is None:
-            traced = self._traced[id(stage)] = _TracedUDF(
-                stage.name, stage.batch_udf)
-        n = batch.num_records
-        data = batch.data
-        if target != n:
-            data = jnp.pad(data, ((0, target - n), (0, 0)),
-                           constant_values=stage.pad_value)
-        out = traced(data)
+    def _traced_for(self, stage: SphereStage, udf, *,
+                    masked: bool = False) -> _TracedUDF:
+        # the wrapper lives ON the stage object (not in an executor-side
+        # id()-keyed dict): same-named stages keep their own traced UDFs,
+        # a stage re-run across a whole session chain keeps one compiled
+        # wrapper, and — now that the executor outlives individual jobs —
+        # a dead stage can never collide with a new stage allocated at
+        # the same address, nor does trace state accumulate unboundedly
+        traced = getattr(stage, "_traced", None)
+        if traced is None or traced.udf is not udf:
+            traced = _TracedUDF(stage.name, udf, masked=masked)
+            stage._traced = traced
+        return traced
+
+    def _note_traces(self, stage: SphereStage, traced: _TracedUDF,
+                     rep: SphereReport) -> None:
         # max-aggregate per report label: a retracing stage must not be
         # masked by a later same-named stage that traced once
         rep.udf_traces[stage.name] = max(rep.udf_traces.get(stage.name, 0),
                                          traced.traces)
+
+    def _apply_masked(self, stage: SphereStage, batch: RecordBatch,
+                      target: int, rep: SphereReport) -> RecordBatch:
+        """Mask-aware reduction path: pad to the stage block shape, hand
+        the UDF a validity mask and the stage's current params.  The
+        output is returned whole — reduction outputs have no padding
+        rows to slice off."""
+        traced = self._traced_for(stage, stage.masked_udf, masked=True)
+        data = batch.pad_to(target, stage.pad_value or 0).data
+        out = traced(data, batch.num_records, stage.params)
+        self._note_traces(stage, traced, rep)
+        return RecordBatch(out)
+
+    def _apply_padded(self, stage: SphereStage, batch: RecordBatch,
+                      target: int, rep: SphereReport) -> RecordBatch:
+        traced = self._traced_for(stage, stage.batch_udf)
+        n = batch.num_records
+        data = batch.pad_to(target, stage.pad_value).data
+        out = traced(data)
+        self._note_traces(stage, traced, rep)
         if out.shape[0] != target:
             raise ValueError(
                 f"stage {stage.name!r} declares pad_value but its batch_udf "
@@ -203,24 +271,32 @@ class ArrayExecutor(_ExecutorBase):
     def run_stage(self, job: SphereJob, stage: SphereStage, plan: StagePlan,
                   parts, rep: SphereReport, *, first_stage: bool
                   ) -> Dict[str, List[RecordBatch]]:
+        masked = stage.masked_udf is not None
         pad_stable = (stage.batch_udf is not None
                       and stage.pad_value is not None)
         # the one fixed shape every task of this stage pads to, so the
         # UDF traces exactly once per stage
         target = (self._stage_block_shape(job, plan, parts, first_stage)
-                  if pad_stable else 0)
+                  if masked or pad_stable else 0)
         out: Dict[str, List[RecordBatch]] = {w: [] for w in self.workers}
         for t in plan.tasks:
             if first_stage:
-                blob = self._fetch_chunk(t.key, rep)
-                if blob is None:
+                batch = self._stage0_input(job, t.key, rep)
+                if batch is None:
                     continue
-                batch = job.split_batch(blob)
             else:
                 batch = parts.get(t.key)
                 if batch is None or not batch.num_records:
                     continue
-            if pad_stable and target:
+            if masked:
+                # a mask-aware stage NEVER leaves the fixed-shape array
+                # path — even a single tiny partial batch in a chained
+                # reduce job pads up to the block shape rather than
+                # silently taking a decode/bytes fallback
+                if batch.num_records:
+                    out[t.executor].append(
+                        self._apply_masked(stage, batch, target, rep))
+            elif pad_stable and target:
                 out[t.executor].append(
                     self._apply_padded(stage, batch, target, rep))
             else:
@@ -272,9 +348,11 @@ class ArrayExecutor(_ExecutorBase):
                 if parts[w] is not None and parts[w].num_records]
 
 
-def make_executor(job: SphereJob, client, workers: Sequence[str], *,
-                  max_retries: int = 3, pad_block: int = 4096):
-    if job.backend == "array":
+def make_executor(backend: str, client, workers: Sequence[str], *,
+                  max_retries: int = 3, pad_block: int = 4096,
+                  cache_chunks: bool = False):
+    if backend == "array":
         return ArrayExecutor(client, workers, max_retries=max_retries,
-                             pad_block=pad_block)
-    return BytesExecutor(client, workers, max_retries=max_retries)
+                             pad_block=pad_block, cache_chunks=cache_chunks)
+    return BytesExecutor(client, workers, max_retries=max_retries,
+                         cache_chunks=cache_chunks)

@@ -22,7 +22,7 @@ Two record backends:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence
 
 from repro.core.records import RecordBatch
 
@@ -30,6 +30,10 @@ from repro.core.records import RecordBatch
 UDF = Callable[[Sequence[bytes]], List[bytes]]
 # A batch UDF maps a RecordBatch to a RecordBatch (array backend).
 BatchUDF = Callable[[RecordBatch], RecordBatch]
+# A mask-aware UDF maps (padded RecordBatch, validity mask, params) to a
+# RecordBatch whose row count depends only on the padded input shape —
+# the contract for reduction-shaped stages (array backend).
+MaskedUDF = Callable[[RecordBatch, Any, Any], RecordBatch]
 # A partitioner maps one record to a bucket index in [0, n_buckets).
 Partitioner = Callable[[bytes, int], int]
 
@@ -51,6 +55,31 @@ class SphereStage:
     # — e.g. identity, row-local maps, or a stable sort with max-byte
     # (0xff) padding.  None = shape-polymorphic UDF, traced per shape.
     pad_value: Optional[int] = None
+    # masked_udf declares the stage *mask-aware* (reduction-shaped): the
+    # array executor pads the input batch with pad_value (default 0) to
+    # the stage's fixed block shape and calls
+    # ``masked_udf(batch, mask, params)`` where ``mask`` is a bool [rows]
+    # validity vector (True = real record).  Unlike pad-stable batch
+    # UDFs, the output row count may differ from the input — it must
+    # depend only on the padded shape (e.g. a k-means assign stage that
+    # folds any number of points into one partial record), and every
+    # output row is real (no un-pad slice).  The executor jits the call
+    # once per stage with (data, n_valid, params) as dynamic arguments,
+    # so a chain of jobs re-running the stage with new ``params`` values
+    # never retraces.  masked_udf and batch_udf are mutually exclusive.
+    masked_udf: Optional[MaskedUDF] = None
+    # per-run parameters, passed to masked_udf as a dynamic jit argument
+    # (a pytree of arrays).  Mutate between session runs — e.g. the
+    # current k-means centroids — without invalidating the traced UDF.
+    # Bytes UDFs may read it via a closure over the stage object.
+    params: Any = None
+
+    def __post_init__(self):
+        if self.masked_udf is not None and self.batch_udf is not None:
+            raise ValueError(f"stage {self.name!r} declares both batch_udf "
+                             f"and masked_udf; they are mutually exclusive")
+        if self.masked_udf is not None and self.pad_value is None:
+            self.pad_value = 0  # masked stages neutralise padding via mask
 
     def apply_bytes(self, records: Sequence[bytes]) -> List[bytes]:
         if self.udf is None:

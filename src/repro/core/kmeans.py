@@ -1,22 +1,36 @@
-"""Distributed k-means as a Sphere job (paper §5.3, Table 2).
+"""Distributed k-means as a chain of Sphere jobs (paper §5.3, Table 2).
 
 Angle's per-pcap clustering: aggregate packet data by source entity, compute
-feature points, cluster with k-means. Structured as iterated two-stage
-Sphere jobs:
+feature points, cluster with k-means. Each iteration is one two-stage
+Sphere job:
 
-  stage 1 (UDF, runs where the chunks live): assign each local point to the
-      nearest centroid; emit per-centroid (sum, count) partials;
-  shuffle: partials are tiny — they all go to bucket 0 (a reduce);
-  stage 2 (UDF): fold partials into new centroids.
+  stage "assign" (UDF, runs where the chunks live): assign each local point
+      to the nearest centroid; emit ONE per-centroid (sums ++ counts)
+      partial record per task;
+  shuffle: partials all go to bucket 0 (``reduce_partitioner`` — the array
+      path computes ids/hist directly, no per-record host loop);
+  stage "fold" (UDF on the bucket-0 worker): fold the partial records into
+      one (sums ++ counts) record; the host turns it into new centroids.
+
+Iterations run through one :class:`SphereSession`: the Sector lookup,
+replica placement and fetched chunks are reused, and both stage UDFs are
+**mask-aware reductions** — the executor pads each task to a fixed block
+shape and passes a validity mask plus the stage's current ``params`` (the
+centroids) as dynamic jit arguments, so each stage traces exactly once for
+the whole chain (``SphereReport.udf_traces == 1``) instead of once per
+chunk shape per iteration.  ``session=False`` keeps the old re-plan +
+re-trace-every-iteration path as the benchmark comparison baseline.
 
 The device-level twin (``kmeans_step_jax``) is the same computation as a
 shard_map over the mesh; the Pallas kernel in ``repro.kernels.kmeans_assign``
-accelerates the assignment hot loop on TPU.
+accelerates the assignment hot loop on TPU
+(``kmeans_assign_partials`` picks kernel vs jnp oracle by backend).
 """
 from __future__ import annotations
 
 import struct
-from typing import List, Tuple
+import time
+from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -30,9 +44,11 @@ try:
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
 
-from repro.core.engine import SphereEngine, SphereReport
+from repro.core.engine import SphereEngine, SphereReport, SphereSession
 from repro.core.job import SphereJob, SphereStage
 from repro.core.records import RecordBatch
+from repro.core.shuffle import reduce_partitioner
+from repro.kernels.kmeans_assign import kmeans_assign_partials
 
 
 # --------------------------- record codecs ---------------------------------
@@ -61,81 +77,92 @@ def _decode_partial(blob: bytes) -> Tuple[np.ndarray, np.ndarray]:
     return sums.copy(), counts.copy()
 
 
-# --------------------------- Sphere job ------------------------------------
+# --------------------------- Sphere stages ---------------------------------
+# Array-backend partial record: ONE row of 4*k*(dim+1) bytes holding
+# float32 [k, dim+1] = per-centroid sums ++ counts.
 
-@jax.jit
-def _assign_partial_batch(data_u8: jax.Array, c: jax.Array) -> jax.Array:
-    """Array-backend assign UDF body: uint8 records [n, 4*dim] + centroids
-    [k, dim] -> one partial record [1, 4*k*(dim+1)] holding float32
-    (per-centroid sums ++ counts)."""
-    n = data_u8.shape[0]
-    pts = jax.lax.bitcast_convert_type(data_u8.reshape(n, -1, 4),
-                                       jnp.float32)          # [n, dim]
-    d2 = (jnp.sum(pts**2, 1)[:, None] - 2 * pts @ c.T
-          + jnp.sum(c**2, 1)[None])
-    a = jnp.argmin(d2, 1)
-    oh = jax.nn.one_hot(a, c.shape[0], dtype=jnp.float32)
-    sums = oh.T @ pts                                        # [k, dim]
-    counts = oh.sum(0)                                       # [k]
-    row = jnp.concatenate([sums, counts[:, None]], axis=1)[None]
-    return jax.lax.bitcast_convert_type(row, jnp.uint8).reshape(1, -1)
+def _partial_width(k: int, dim: int) -> int:
+    return 4 * k * (dim + 1)
 
 
-def kmeans_sphere(engine: SphereEngine, file: str, dim: int, k: int,
-                  iters: int, seed: int = 0, backend: str = "bytes"
-                  ) -> Tuple[np.ndarray, SphereReport]:
-    """Run k-means over a Sector file of float32 points via Sphere.
+def _f32_rows(batch: RecordBatch) -> jax.Array:
+    """Reinterpret a batch's rows as little-endian float32."""
+    return jax.lax.bitcast_convert_type(
+        batch.data.reshape(batch.num_records, -1, 4), jnp.float32)
 
-    ``backend="bytes"`` treats each chunk as one record and loops in
-    numpy; ``backend="array"`` packs points into a :class:`RecordBatch`
-    and runs the jitted assign UDF per chunk batch.
-    """
-    rng = np.random.default_rng(seed)
-    centroids = rng.normal(size=(k, dim)).astype(np.float32)
-    report = SphereReport()
 
-    for _ in range(iters):
-        c = centroids.copy()
+def _f32_record(row: jax.Array) -> RecordBatch:
+    """float32 [1, m] -> a one-record batch of 4*m bytes."""
+    raw = jax.lax.bitcast_convert_type(row, jnp.uint8)
+    return RecordBatch(raw.reshape(1, -1))
 
-        def assign_udf(records: List[bytes]) -> List[bytes]:
-            out = []
-            for blob in records:
-                pts = decode_points(blob, dim)
-                d2 = ((pts[:, None, :] - c[None]) ** 2).sum(-1)
-                a = d2.argmin(1)
-                sums = np.zeros((k, dim))
-                counts = np.zeros(k, np.int64)
-                np.add.at(sums, a, pts)
-                np.add.at(counts, a, 1)
-                out.append(_encode_partial(sums, counts))
-            return out
 
-        if backend == "array":
-            c_dev = jnp.asarray(c)
+def make_kmeans_stages(dim: int, k: int, backend: str) -> List[SphereStage]:
+    """The assign+fold stage pair, built ONCE per chain.  Feed each
+    iteration's centroids through ``stages[0].params`` (array: a jnp
+    [k, dim] array; bytes: a numpy array read by the closure) — the
+    traced UDFs treat params as a dynamic argument, so updating them
+    never retraces."""
+    if backend == "array":
+        def assign_masked(batch: RecordBatch, mask, c) -> RecordBatch:
+            pts = _f32_rows(batch)                       # [n, dim]
+            sums, counts = kmeans_assign_partials(pts, c, mask)
+            row = jnp.concatenate([sums, counts[:, None]],
+                                  axis=1).reshape(1, -1)
+            return _f32_record(row)
 
-            def assign_batch(batch: RecordBatch) -> RecordBatch:
-                return RecordBatch(_assign_partial_batch(batch.data, c_dev))
+        def fold_masked(batch: RecordBatch, mask, _params) -> RecordBatch:
+            arr = _f32_rows(batch)                       # [n, k*(dim+1)]
+            arr = arr * mask.astype(jnp.float32)[:, None]
+            return _f32_record(arr.sum(0, keepdims=True))
 
-            job = SphereJob(
-                name="kmeans-assign", input_file=file,
-                stages=[SphereStage("assign", batch_udf=assign_batch,
-                                    partitioner=lambda r, n: 0)],
-                record_size=4 * dim, backend="array")
-        else:
-            job = SphereJob(
-                name="kmeans-assign", input_file=file,
-                stages=[SphereStage("assign", assign_udf,
-                                    partitioner=lambda r, n: 0)],  # reduce
-                record_size=0)
-        outputs, report = engine.run(job, report)
+        return [
+            SphereStage("assign", masked_udf=assign_masked,
+                        partitioner=reduce_partitioner()),
+            SphereStage("fold", masked_udf=fold_masked),
+        ]
+
+    assign = SphereStage("assign", partitioner=reduce_partitioner())
+
+    def assign_udf(records: List[bytes]) -> List[bytes]:
+        c = np.asarray(assign.params)
+        out = []
+        for blob in records:
+            pts = decode_points(blob, dim)
+            d2 = ((pts[:, None, :] - c[None]) ** 2).sum(-1)
+            a = d2.argmin(1)
+            sums = np.zeros((k, dim))
+            counts = np.zeros(k, np.int64)
+            np.add.at(sums, a, pts)
+            np.add.at(counts, a, 1)
+            out.append(_encode_partial(sums, counts))
+        return out
+
+    def fold_udf(records: List[bytes]) -> List[bytes]:
         sums = np.zeros((k, dim))
-        counts = np.zeros(k, np.float64)
-        for blob in outputs:
-            if backend == "array":
-                arr = np.frombuffer(blob, "<f4").reshape(-1, k, dim + 1)
-                sums += arr[..., :dim].sum(0)
-                counts += arr[..., dim].sum(0)
-                continue
+        counts = np.zeros(k, np.int64)
+        for r in records:
+            s, n = _decode_partial(r)
+            sums += s
+            counts += n
+        return [_encode_partial(sums, counts)]
+
+    assign.udf = assign_udf
+    return [assign, SphereStage("fold", fold_udf)]
+
+
+def _fold_outputs(outputs: List[bytes], dim: int, k: int, backend: str
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """(sums, counts) from a job's final blobs (normally one fold record;
+    summing tolerates degenerate multi-bucket outputs)."""
+    sums = np.zeros((k, dim))
+    counts = np.zeros(k, np.float64)
+    for blob in outputs:
+        if backend == "array":
+            arr = np.frombuffer(blob, "<f4").reshape(-1, k, dim + 1)
+            sums += arr[..., :dim].sum(0)
+            counts += arr[..., dim].sum(0)
+        else:
             off = 0
             while off < len(blob):
                 kk, dd = struct.unpack("<II", blob[off:off + 8])
@@ -144,8 +171,60 @@ def kmeans_sphere(engine: SphereEngine, file: str, dim: int, k: int,
                 sums += s
                 counts += n
                 off += size
+    return sums, counts
+
+
+# --------------------------- driver ----------------------------------------
+
+def kmeans_sphere(engine: SphereEngine, file: str, dim: int, k: int,
+                  iters: int, seed: int = 0, backend: str = "bytes",
+                  session: Union[bool, SphereSession, None] = True,
+                  iter_seconds: Optional[List[float]] = None
+                  ) -> Tuple[np.ndarray, SphereReport]:
+    """Run k-means over a Sector file of float32 points via Sphere.
+
+    ``session=True`` (default) chains the iterations through one
+    :class:`SphereSession` — one lookup, one stage-0 plan, chunks decoded
+    once, each stage UDF traced once for the whole run; pass an existing
+    session to share it.  ``session=False`` re-plans and re-traces every
+    iteration through ``engine.run`` (the pre-session behaviour, kept as
+    the benchmark comparison baseline).  ``iter_seconds``, when given a
+    list, collects real per-iteration wall clock.
+    """
+    rng = np.random.default_rng(seed)
+    centroids = rng.normal(size=(k, dim)).astype(np.float32)
+    report = SphereReport()
+    record_size = 4 * dim if backend == "array" else 0
+
+    sess: Optional[SphereSession] = None
+    if isinstance(session, SphereSession):
+        sess = session
+    elif session:
+        sess = engine.session(file, record_size=record_size, backend=backend)
+    if sess is not None:
+        stages = make_kmeans_stages(dim, k, backend)
+        job = SphereJob("kmeans", file, stages, record_size=record_size,
+                        backend=backend)
+
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        if sess is None:
+            # re-plan + re-trace path: fresh stages, fresh job, fresh
+            # planner/executor on every iteration
+            stages = make_kmeans_stages(dim, k, backend)
+            job = SphereJob("kmeans", file, stages,
+                            record_size=record_size, backend=backend)
+        stages[0].params = (jnp.asarray(centroids) if backend == "array"
+                            else centroids.copy())
+        if sess is not None:
+            outputs, report = sess.run(job, report)
+        else:
+            outputs, report = engine.run(job, report)
+        sums, counts = _fold_outputs(outputs, dim, k, backend)
         nz = counts > 0
         centroids[nz] = (sums[nz] / counts[nz, None]).astype(np.float32)
+        if iter_seconds is not None:
+            iter_seconds.append(time.perf_counter() - t0)
     return centroids, report
 
 

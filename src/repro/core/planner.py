@@ -89,6 +89,18 @@ class SpherePlanner:
         self.speeds = dict(speeds or {})
         self.speculate_factor = speculate_factor
         self._move_time = move_time or (lambda nbytes, src, dst: 0.0)
+        # per-JOB speculation state: worker -> count of tasks observed
+        # straggling on it so far in the current job.  Later stages of the
+        # same job avoid speculating *onto* these workers when another
+        # replica is available; a session running a chain of jobs through
+        # one planner resets this at every job boundary so one job's slow
+        # node never biases the next job's placement.
+        self.job_stragglers: Dict[str, int] = {}
+
+    def reset_job_state(self) -> None:
+        """Forget per-job speculation/straggler observations (called by
+        the engine/session at each job boundary)."""
+        self.job_stragglers.clear()
 
     def _speed(self, worker: str) -> float:
         return self.speeds.get(worker, 1.0)
@@ -131,7 +143,12 @@ class SpherePlanner:
         for t, w, fin in scheduled:
             best_w, best_fin = w, fin
             if fin > self.speculate_factor * median:
-                for alt in [x for x in t.locs if x != w and x in act_ready]:
+                self.job_stragglers[w] = self.job_stragglers.get(w, 0) + 1
+                alts = [x for x in t.locs if x != w and x in act_ready]
+                # known stragglers are poor speculation targets: try clean
+                # replicas first, fall back to the full list otherwise
+                clean = [x for x in alts if x not in self.job_stragglers]
+                for alt in clean or alts:
                     alt_fin = act_ready[alt] + self._proc_time(alt, t.nbytes)
                     speculated += 1
                     if alt_fin < best_fin:

@@ -127,6 +127,17 @@ class RecordBatch:
     def take(self, idx) -> "RecordBatch":
         return RecordBatch(jnp.take(self.data, jnp.asarray(idx), axis=0))
 
+    def pad_to(self, n_rows: int, pad_value: int = 0) -> "RecordBatch":
+        """Right-pad with ``pad_value`` rows up to ``n_rows`` (the fixed
+        block shape of pad-stable / mask-aware stage UDFs)."""
+        n = self.num_records
+        if n_rows < n:
+            raise ValueError(f"cannot pad {n} records down to {n_rows}")
+        if n_rows == n:
+            return self
+        return RecordBatch(jnp.pad(self.data, ((0, n_rows - n), (0, 0)),
+                                   constant_values=pad_value))
+
     # --------------------------------------------------------------- keys
     def keys_u32(self, width: int = 4) -> jax.Array:
         """Big-endian uint32 of each record's first ``width`` (<= 4) bytes,

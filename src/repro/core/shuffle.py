@@ -142,8 +142,32 @@ class RangePartitioner:
                                  block_n=block_n, interpret=interpret)
 
 
+class ReducePartitioner:
+    """Every record to bucket 0 — the reduction shuffle (e.g. k-means
+    partials folding on one worker).  The array path computes ids and
+    histogram directly instead of dropping to the per-record host loop
+    that arbitrary ``lambda r, n: 0`` callables would take, so reduce
+    stages stay on the array fast path even for a single tiny batch of
+    partials."""
+
+    def __call__(self, record: bytes, n: int) -> int:
+        return 0
+
+    def bucket_ids(self, batch: RecordBatch, n: int, *,
+                   block_n: int = 1 << 20, interpret: bool | None = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+        nrec = batch.num_records
+        ids = jnp.zeros((nrec,), jnp.int32)
+        hist = jnp.zeros((max(n, 1),), jnp.int32).at[0].set(nrec)
+        return ids, hist
+
+
 def hash_partitioner(key_bytes: int = 8) -> HashPartitioner:
     return HashPartitioner(key_bytes)
+
+
+def reduce_partitioner() -> ReducePartitioner:
+    return ReducePartitioner()
 
 
 def range_partitioner(boundaries: Sequence[bytes]) -> RangePartitioner:

@@ -1,2 +1,3 @@
-from repro.kernels.kmeans_assign.ops import kmeans_assign  # noqa: F401
+from repro.kernels.kmeans_assign.ops import (kmeans_assign,  # noqa: F401
+                                             kmeans_assign_partials)
 from repro.kernels.kmeans_assign.ref import kmeans_assign_ref  # noqa: F401

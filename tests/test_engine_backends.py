@@ -10,9 +10,13 @@ diffing SphereReports across backends."""
 import numpy as np
 import pytest
 
+import jax.numpy as jnp
+
 from conftest import make_cloud
 from repro.core import SphereEngine, SphereJob, SphereStage
-from repro.core.shuffle import sample_boundaries, terasort_stages
+from repro.core.records import RecordBatch
+from repro.core.shuffle import (reduce_partitioner, sample_boundaries,
+                                terasort_stages)
 
 REC = 100
 
@@ -166,6 +170,76 @@ def test_same_named_stages_keep_their_own_udfs(tmp_path):
     want = np.sort((np.frombuffer(vals.tobytes(), np.uint8) + 3)
                    .astype(np.uint8))
     np.testing.assert_array_equal(got, want)
+
+
+def _reduce_jobs(backend):
+    """An emit job (identity + reduce shuffle to bucket 0) and a chained
+    fold job (sum the float32 columns of all records into one record) —
+    the k-means-shaped reduce pipeline on tiny inputs."""
+    emit = SphereJob(
+        "emit", "f",
+        [SphereStage("emit", lambda rs: list(rs), batch_udf=lambda b: b,
+                     pad_value=0, partitioner=reduce_partitioner())],
+        record_size=8, backend=backend)
+
+    def fold_bytes(records):
+        tot = np.sum([np.frombuffer(r, "<f4") for r in records], axis=0,
+                     dtype=np.float32)
+        return [tot.astype("<f4").tobytes()]
+
+    # array fold: bitcast rows to f32, zero out padding via mask, sum
+    import jax
+
+    def fold_masked(batch, mask, _params):
+        arr = jax.lax.bitcast_convert_type(
+            batch.data.reshape(batch.num_records, -1, 4), jnp.float32)
+        arr = arr * mask.astype(jnp.float32)[:, None]
+        raw = jax.lax.bitcast_convert_type(arr.sum(0, keepdims=True),
+                                           jnp.uint8)
+        return RecordBatch(raw.reshape(1, -1))
+
+    fold = SphereJob(
+        "fold", "f",
+        [SphereStage("fold", fold_bytes, masked_udf=fold_masked)],
+        record_size=8, backend=backend)
+    return emit, fold
+
+
+def test_chained_reduce_tiny_batch_backend_parity(tmp_path, monkeypatch):
+    """The reduce path must not silently drop to the per-record host loop
+    (the bytes-path fallback) — even when a chained job's whole input is
+    a single tiny batch of partials.  reduce_partitioner stays on the
+    array path, the mask-aware fold stays at its fixed block shape, and
+    both backends agree on outputs AND scheduling reports."""
+    import repro.core.shuffle as shuffle_mod
+
+    def boom(*a, **k):
+        raise AssertionError("reduce path fell back to _host_partition")
+
+    monkeypatch.setattr(shuffle_mod, "_host_partition", boom)
+    # integer-valued floats: sums are exact in f4 and f8 alike, so the
+    # two backends' outputs are byte-identical
+    rng = np.random.default_rng(7)
+    vals = rng.integers(0, 1000, size=(40, 2)).astype("<f4")
+
+    results = {}
+    for backend in ("bytes", "array"):
+        sub = tmp_path / backend
+        sub.mkdir()
+        master, servers, client = make_cloud(sub, chunk_size=1000)
+        client.upload("f", vals.tobytes(), replication=2)
+        emit, fold = _reduce_jobs(backend)
+        sess = SphereEngine(master, client).session("f", record_size=8,
+                                                    backend=backend)
+        sess.run(emit)
+        outs, rep = sess.run(fold, input="chained")
+        results[backend] = (outs, rep)
+        assert len(outs) == 1  # one folded record
+        np.testing.assert_allclose(np.frombuffer(outs[0], "<f4"),
+                                   vals.sum(0))
+    assert results["bytes"][0] == results["array"][0]
+    assert _report_key(results["array"][1]) == _report_key(results["bytes"][1])
+    assert results["array"][1].udf_traces["fold"] == 1
 
 
 def test_pad_unstable_udf_is_rejected(tmp_path):
