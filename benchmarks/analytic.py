@@ -14,7 +14,7 @@ chip count. A matmul [m,k]x[k,n] counts 2mkn FLOPs.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models.common import round_up

@@ -38,6 +38,13 @@ WATCHED = [
      ("result", "kmeans", "session_iter_rec_per_s"), "abs"),
     ("BENCH_table2_kmeans.json",
      ("result", "kmeans", "session_speedup"), "ratio"),
+    # streaming path: steady-state per-window throughput and the
+    # stream-vs-rebuild-per-window wall-clock speedup — gates the
+    # stream subsystem's delta planning + trace-once guarantees
+    ("BENCH_stream_window.json",
+     ("result", "stream", "window_rec_per_s"), "abs"),
+    ("BENCH_stream_window.json",
+     ("result", "stream", "speedup"), "ratio"),
 ]
 
 

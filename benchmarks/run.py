@@ -46,13 +46,14 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     os.makedirs(args.out_dir, exist_ok=True)
 
-    from benchmarks import (roofline, table1_llpr, table2_kmeans,
-                            table3_terasort)
+    from benchmarks import (roofline, stream_window, table1_llpr,
+                            table2_kmeans, table3_terasort)
 
     sections = [
         ("table1_llpr", table1_llpr.main),
         ("table2_kmeans", table2_kmeans.main),
         ("table3_terasort", table3_terasort.main),
+        ("stream_window", stream_window.main),
         ("roofline", roofline.main),
     ]
     failed = [name for name, fn in sections

@@ -1,0 +1,109 @@
+"""Angle continuous mining (paper §5.3 + arXiv:0808.3019): streaming
+windowed k-means over TCP-flow feature files AS THEY LAND in Sector.
+
+Sensor nodes at four sites continuously package anonymised packet windows
+into feature files.  Unlike ``angle_kmeans.py`` — which opens a fresh
+session per window file — this example never polls: a
+:class:`SphereStream` subscribes to the ``angle/window_`` path prefix on
+the master's event bus, every upload's ``file-created`` event advances a
+sliding window over the newest files, and the per-window callback fits a
+warm-started k-means **during the upload that completed the window**
+(compute follows the data).  Across the whole stream:
+
+* each window plans only the delta — the one new file's chunks; the
+  surviving files keep their cached plans and device-resident chunks;
+* the k-means stages trace exactly once (``udf_traces == 1``) for every
+  window and iteration, because the stage pair persists and centroids
+  ride along as a dynamic jit argument;
+* each window's model warm-starts from the previous window's, and the
+  model sequence feeds the temporal anomaly detector.
+
+    PYTHONPATH=src python examples/angle_stream.py [--backend {array,bytes}]
+"""
+import argparse
+import tempfile
+
+import numpy as np
+
+from repro.core import SphereEngine, WindowPolicy
+from repro.core.kmeans import StreamingKMeans, encode_points
+from repro.sector import ChunkServer, SectorClient, SectorMaster
+
+SITES = ["chicago", "greenbelt", "pasadena", "tokyo"]  # sensor sites
+DIM, K = 6, 4
+FILES, WIN = 9, 4          # 9 arriving files -> 6 sliding windows
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--backend", choices=("array", "bytes"), default="array")
+backend = ap.parse_args().backend
+
+tmp = tempfile.mkdtemp()
+master = SectorMaster(chunk_size=96 * 1024)  # 4096 records of 24 B
+for i, site in enumerate(SITES * 2):
+    master.register(ChunkServer(f"s{i}", site, tmp))
+master.acl.add_member("angle")
+master.acl.grant_write("angle")
+client = SectorClient(master, "angle", "chicago")
+
+engine = SphereEngine(master, client)
+record_size = 4 * DIM if backend == "array" else 0
+stream = engine.stream("angle/window_", window=WindowPolicy.sliding(WIN),
+                       record_size=record_size, backend=backend)
+skm = StreamingKMeans(stream, DIM, K + 1, iters=4)  # spare centroid
+
+models = []
+
+
+def on_window(s, idx, files):
+    before = (skm.report.planned_tasks, skm.report.reused_tasks)
+    models.append(skm.fit_window())
+    planned = skm.report.planned_tasks - before[0]
+    reused = skm.report.reused_tasks - before[1]
+    print(f"window {idx} [{files[0].split('_')[-1]}..{files[-1].split('_')[-1]}]"
+          f": planned {planned} delta chunks, replayed {reused}, "
+          f"traces {dict(skm.report.udf_traces)}")
+
+
+stream.on_window(on_window)
+
+# the sensor feed: files 0..6 are normal traffic, files 7-8 carry an
+# injected anomaly cluster (landing in sliding windows 4 and 5).  Each
+# upload's file-created event drives the windowing and (synchronously)
+# the per-window clustering above.
+rng = np.random.default_rng(0)
+normal_centers = rng.normal(size=(K, DIM)) * 3
+for w in range(FILES):
+    pts = np.concatenate([
+        rng.normal(c, 0.4, size=(400, DIM)) for c in normal_centers])
+    if w >= 7:  # suspicious behaviour: a new tight cluster far away
+        pts = np.concatenate([pts, rng.normal(12.0, 0.2, size=(150, DIM))])
+    client.upload(f"angle/window_{w:03d}.f32",
+                  encode_points(pts.astype(np.float32)), replication=2)
+
+n_windows = FILES - WIN + 1
+assert stream.windows_formed == n_windows == len(models)
+if backend == "array":
+    assert skm.report.udf_traces == {"assign": 1, "fold": 1}, \
+        "stage UDFs must trace once across the entire stream"
+
+# temporal analysis: alert when a window's cluster model drifts from the
+# all-normal early windows
+baseline = np.stack(models[:3]).mean(0)
+
+
+def drift(m):
+    # symmetric chamfer distance between centroid sets
+    d = np.linalg.norm(m[:, None] - baseline[None], axis=-1)
+    return 0.5 * (d.min(0).mean() + d.min(1).mean())
+
+
+scores = [drift(m) for m in models]
+# normal windows drift ~0.01 (warm starts keep the model pinned); the
+# chamfer mean dilutes a single escaping centroid by 1/(K+1), so the
+# anomaly windows land around 0.5-1.0 — a 0.1 floor splits them cleanly
+thresh = max(np.mean(scores[:3]) + 4 * np.std(scores[:3]), 0.1)
+print("\nwindow drift scores:", " ".join(f"{s:.2f}" for s in scores))
+alerts = [w for w, s in enumerate(scores) if s > thresh]
+# the anomaly files (7, 8) fall inside sliding windows 4 and 5
+print(f"ALERTS at windows {alerts} (expected [4, 5])")
+assert alerts == [4, 5]

@@ -17,8 +17,8 @@ assigned input-shape set shared by all LM-family architectures.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 
 # ---------------------------------------------------------------------------

@@ -2,7 +2,8 @@ from repro.core.engine import (SphereEngine, SphereReport,  # noqa: F401
                                SphereSession)
 from repro.core.executor import ArrayExecutor, BytesExecutor  # noqa: F401
 from repro.core.job import SphereJob, SphereStage  # noqa: F401
-from repro.core.planner import (SpherePlanner, StagePlan,  # noqa: F401
-                                TaskPlan, TaskSpec)
+from repro.core.planner import (IncrementalPlan,  # noqa: F401
+                                SpherePlanner, StagePlan, TaskPlan, TaskSpec)
+from repro.core.stream import SphereStream, WindowPolicy  # noqa: F401
 from repro.core.shuffle import (hash_partitioner,  # noqa: F401
                                 range_partitioner, reduce_partitioner)

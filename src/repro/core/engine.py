@@ -34,6 +34,14 @@ plan) once, keeps stage-0 chunks and job output partitions
 device-resident between jobs, and preserves the executor's traced-UDF
 cache so a stage re-run every iteration compiles exactly once.
 
+A session is the single-file special case of a
+:class:`repro.core.stream.SphereStream` — the windowed multi-file
+generalization that subscribes to a Sector path prefix on the master's
+event bus and plans only the per-window delta (see
+:mod:`repro.core.stream`).  Both invalidate automatically on
+``server-joined`` / ``server-died`` events; the old manual
+``SphereSession.refresh()`` is a deprecated no-op.
+
 UDF outputs are correct Python bytes while time is fully simulated, so
 unit tests assert both output correctness and scheduling properties
 (locality fraction, speculation wins, retry counts) — and because the
@@ -42,17 +50,18 @@ second agrees across the two backends for the same job.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.executor import make_executor
 from repro.core.job import SphereJob
-from repro.core.planner import (PROCESS_RATE, SpherePlanner, SphereReport,
-                                TaskSpec)
+from repro.core.planner import (PROCESS_RATE, SphereReport, TaskSpec)
+from repro.core.stream import SphereStream, WindowPolicy
 from repro.sector.client import SectorClient
 from repro.sector.master import SectorMaster
 from repro.sector.transport import simulate_transfer
 
-__all__ = ["SphereEngine", "SphereSession", "SphereReport", "PROCESS_RATE"]
+__all__ = ["SphereEngine", "SphereSession", "SphereStream", "SphereReport",
+           "WindowPolicy", "PROCESS_RATE"]
 
 
 class SphereEngine:
@@ -97,6 +106,16 @@ class SphereEngine:
         return SphereSession(self, input_file, record_size=record_size,
                              backend=backend, cache_chunks=cache_chunks)
 
+    def stream(self, prefix: str, *, window: Optional[WindowPolicy] = None,
+               record_size: int = 0, backend: str = "bytes",
+               cache_chunks: bool = True) -> SphereStream:
+        """Open a windowed multi-file stream subscribed to every Sector
+        file whose name starts with ``prefix`` (see
+        :mod:`repro.core.stream`)."""
+        return SphereStream(self, prefix, window=window,
+                            record_size=record_size, backend=backend,
+                            cache_chunks=cache_chunks)
+
     # ----------------------------------------------------------------- run
     def run(self, job: SphereJob, report: Optional[SphereReport] = None
             ) -> Tuple[List[bytes], SphereReport]:
@@ -109,10 +128,13 @@ class SphereEngine:
         session = SphereSession(self, job.input_file,
                                 record_size=job.record_size,
                                 backend=job.backend, cache_chunks=False)
-        return session.run(job, report)
+        try:
+            return session.run(job, report)
+        finally:
+            session.close()
 
 
-class SphereSession:
+class SphereSession(SphereStream):
     """One planner + one executor shared by a chain of Sphere jobs.
 
     The per-job engine path re-derives everything on every ``run``:
@@ -125,8 +147,8 @@ class SphereSession:
         reads the file;
       * replica placement for stage 0 (the dominant planning cost) is
         computed once — the planner is deterministic over task sizes, so
-        the cached :class:`StagePlan` is exactly what re-planning would
-        produce, and its counters are re-charged to each job's report;
+        the cached plan is exactly what re-planning would produce, and
+        its counters are re-charged to each job's report;
       * the executor persists: stage-0 chunks are fetched and decoded
         once (``cache_chunks``), traced UDFs stay compiled (a stage
         object re-run each iteration reports ``udf_traces == 1`` across
@@ -139,163 +161,29 @@ class SphereSession:
         (:meth:`SpherePlanner.reset_job_state`), so behaviour per job is
         identical to a fresh engine run.
 
-    The session assumes stable cluster membership; after a server joins
-    or dies, call :meth:`refresh` to re-bind to the live workers and drop
-    the cached lookup/plan/chunks (chained partitions are dropped too —
-    they are keyed to the old membership).
+    Implementation-wise this is a :class:`SphereStream` pinned to one
+    file: the window never advances, so the incremental stage-0 plan has
+    exactly one group for the whole chain.  Membership changes
+    (``server-joined`` / ``server-died`` on the master's event bus)
+    invalidate the cached lookup/plan/chunks automatically — chained
+    partitions too, since they are keyed to the old membership.
     """
+
+    _kind = "session"
 
     def __init__(self, engine: SphereEngine, input_file: str, *,
                  record_size: int = 0, backend: str = "bytes",
                  cache_chunks: bool = True):
-        self.engine = engine
+        super().__init__(engine, record_size=record_size, backend=backend,
+                         cache_chunks=cache_chunks, files=(input_file,))
         self.input_file = input_file
-        self.record_size = record_size
-        self.backend = backend
-        self._cache_chunks = cache_chunks
-        self.planner = SpherePlanner(speeds=engine.speeds,
-                                     speculate_factor=engine.speculate_factor,
-                                     move_time=engine._move_time)
-        self._stage0_tasks: Optional[List[TaskSpec]] = None
-        self._stage0_plan = None
-        self._stage0_stragglers: Dict[str, int] = {}
-        self._parts = None          # last job's output partitions
-        self.jobs_run = 0
-        self._bind_cluster()
 
-    def _bind_cluster(self) -> None:
-        self.workers = self.engine._workers()
-        if not self.workers:
-            raise RuntimeError("no live workers")
-        self.executor = make_executor(self.backend, self.engine.client,
-                                      self.workers,
-                                      max_retries=self.engine.max_retries,
-                                      pad_block=self.engine.pad_block,
-                                      cache_chunks=self._cache_chunks)
-
-    # --------------------------------------------------------------- cache
     def refresh(self) -> None:
-        """Re-bind the session to the current cluster: re-derive live
-        workers, rebuild the executor (dropping the chunk, traced-UDF and
-        chained-partition state, which are keyed to the old membership),
-        and drop the cached lookup/placement."""
-        self._stage0_tasks = None
-        self._stage0_plan = None
-        self._stage0_stragglers = {}
-        self._parts = None
-        self._bind_cluster()
-
-    def _file_tasks(self) -> List[TaskSpec]:
-        if self._stage0_tasks is None:
-            master = self.engine.master
-            metas = master.lookup(self.input_file, self.engine.client.user)
-            self._stage0_tasks = [
-                TaskSpec(m.chunk_id, m.size,
-                         tuple(s for s in m.locations
-                               if s in master.servers
-                               and master.servers[s].alive))
-                for m in metas]
-        return self._stage0_tasks
-
-    def _validate(self, job: SphereJob, input: str) -> None:
-        if input not in ("file", "chained"):
-            raise ValueError(f"unknown session input {input!r}; "
-                             f"choose 'file' or 'chained'")
-        if job.backend != self.backend:
-            raise ValueError(f"job backend {job.backend!r} != session "
-                             f"backend {self.backend!r}")
-        if job.record_size != self.record_size:
-            raise ValueError(f"job record_size {job.record_size} != session "
-                             f"record_size {self.record_size}")
-        if input == "file" and job.input_file != self.input_file:
-            raise ValueError(f"job reads {job.input_file!r} but this session "
-                             f"chains over {self.input_file!r}")
-        chunk = self.engine.master.chunk_size
-        if job.record_size and chunk % job.record_size:
-            raise ValueError(
-                f"chunk_size {chunk} must be a multiple of "
-                f"record_size {job.record_size} (records must not straddle "
-                f"chunk boundaries)")
-
-    # ----------------------------------------------------------------- run
-    def run(self, job: SphereJob, report: Optional[SphereReport] = None, *,
-            input: str = "file") -> Tuple[List[bytes], SphereReport]:
-        """Execute one job of the chain.  ``input="file"`` reads the
-        session's Sector file (cached lookup/plan/chunks); ``"chained"``
-        consumes the previous job's output partitions in place — on the
-        array backend they are still device-resident RecordBatches.
-        Returns (per-bucket output blobs, report)."""
-        self._validate(job, input)
-        rep = report or SphereReport()
-        workers = self.workers
-        planner, executor = self.planner, self.executor
-        planner.reset_job_state()
-
-        if input == "chained":
-            if self._parts is None:
-                raise RuntimeError("no previous job output to chain from")
-            parts = self._parts
-            sizes = executor.part_sizes(parts)
-            tasks = [TaskSpec(w, sz, (w,))
-                     for w, sz in sizes.items() if sz]
-            first = False
-        else:
-            tasks = self._file_tasks()
-            parts = executor.empty_parts()
-            first = True
-
-        for stage in job.stages:
-            if first and self._stage0_plan is not None:
-                plan = self._stage0_plan
-                # replay the straggler observations planning this stage
-                # made the first time, so later stages of every chained
-                # job see exactly the state a fresh plan would produce
-                planner.job_stragglers.update(self._stage0_stragglers)
-            else:
-                plan = planner.plan_stage(self.engine._schedule_view(tasks),
-                                          workers)
-                if first:
-                    self._stage0_plan = plan
-                    # job_stragglers was empty at job start (reset above),
-                    # so this is exactly stage 0's contribution
-                    self._stage0_stragglers = dict(planner.job_stragglers)
-            rep.tasks += len(plan.tasks)
-            rep.bytes_local += plan.bytes_local
-            rep.bytes_moved += plan.bytes_moved
-            rep.speculated += plan.speculated
-            rep.speculation_wins += plan.speculation_wins
-            t_stage = plan.seconds
-
-            out = executor.run_stage(job, stage, plan, parts, rep,
-                                     first_stage=first)
-            if stage.partitioner is not None:
-                n = stage.n_buckets or len(workers)
-                buckets, origins = executor.bucketize(stage, out, n, rep)
-                # bucket i lives on worker i % len(workers); charge the
-                # movement of each fragment from its actual origin worker
-                flows = [(src, workers[i % len(workers)], nbytes)
-                         for i, origin in enumerate(origins)
-                         for src, nbytes in origin.items()]
-                t_shuffle, moved, local = planner.plan_shuffle(flows)
-                rep.bytes_moved += moved
-                rep.bytes_local += local
-                t_stage += t_shuffle
-                executor.place_buckets(buckets, parts)
-            else:
-                executor.set_parts(parts, out)
-
-            sizes = executor.part_sizes(parts)
-            t_stage += self.engine._stage_barrier_seconds(sum(sizes.values()))
-            rep.stage_seconds.append(t_stage)
-            rep.sim_seconds += t_stage
-            first = False
-            # next stage's tasks are the current partitions (local to owner)
-            tasks = [TaskSpec(w, sz, (w,))
-                     for w, sz in sizes.items() if sz]
-
-        moved_total = rep.bytes_moved + rep.bytes_local
-        rep.locality_fraction = (rep.bytes_local / moved_total
-                                 if moved_total else 1.0)
-        self._parts = parts
-        self.jobs_run += 1
-        return executor.outputs(parts), rep
+        """Deprecated no-op.  Sessions subscribe to the master's event
+        bus and invalidate automatically when membership changes; there
+        is nothing left to refresh by hand."""
+        warnings.warn(
+            "SphereSession.refresh() is deprecated and now a no-op: "
+            "sessions invalidate automatically on server-joined/"
+            "server-died events from the Sector master's event bus",
+            DeprecationWarning, stacklevel=2)

@@ -59,6 +59,15 @@ class _ExecutorBase:
         if self._chunk_cache is not None:
             self._chunk_cache.clear()
 
+    def evict_chunks(self, keys) -> None:
+        """Drop specific cached chunks — stream window retirement: an
+        expired file's decoded chunks are released while every surviving
+        cache entry stays untouched (and, on the array backend,
+        device-resident)."""
+        if self._chunk_cache is not None:
+            for k in keys:
+                self._chunk_cache.pop(k, None)
+
     def _fetch_chunk(self, key: str, rep: SphereReport) -> Optional[bytes]:
         """Read a stage-0 chunk, retrying over surviving replicas."""
         for _ in range(self.max_retries):

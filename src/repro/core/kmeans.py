@@ -179,7 +179,8 @@ def _fold_outputs(outputs: List[bytes], dim: int, k: int, backend: str
 def kmeans_sphere(engine: SphereEngine, file: str, dim: int, k: int,
                   iters: int, seed: int = 0, backend: str = "bytes",
                   session: Union[bool, SphereSession, None] = True,
-                  iter_seconds: Optional[List[float]] = None
+                  iter_seconds: Optional[List[float]] = None,
+                  init: Optional[np.ndarray] = None
                   ) -> Tuple[np.ndarray, SphereReport]:
     """Run k-means over a Sector file of float32 points via Sphere.
 
@@ -189,43 +190,120 @@ def kmeans_sphere(engine: SphereEngine, file: str, dim: int, k: int,
     session to share it.  ``session=False`` re-plans and re-traces every
     iteration through ``engine.run`` (the pre-session behaviour, kept as
     the benchmark comparison baseline).  ``iter_seconds``, when given a
-    list, collects real per-iteration wall clock.
+    list, collects real per-iteration wall clock.  ``init`` warm-starts
+    the centroids (overriding the seeded random init) — streaming
+    windows warm-start from the previous window's model.
     """
-    rng = np.random.default_rng(seed)
-    centroids = rng.normal(size=(k, dim)).astype(np.float32)
+    if init is not None:
+        centroids = np.array(init, dtype=np.float32, copy=True)
+        if centroids.shape != (k, dim):
+            raise ValueError(f"init shape {centroids.shape} != {(k, dim)}")
+    else:
+        rng = np.random.default_rng(seed)
+        centroids = rng.normal(size=(k, dim)).astype(np.float32)
     report = SphereReport()
     record_size = 4 * dim if backend == "array" else 0
 
     sess: Optional[SphereSession] = None
+    own_session = False
     if isinstance(session, SphereSession):
         sess = session
     elif session:
         sess = engine.session(file, record_size=record_size, backend=backend)
+        own_session = True  # close (unsubscribe) our throwaway session
     if sess is not None:
         stages = make_kmeans_stages(dim, k, backend)
         job = SphereJob("kmeans", file, stages, record_size=record_size,
                         backend=backend)
 
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        if sess is None:
-            # re-plan + re-trace path: fresh stages, fresh job, fresh
-            # planner/executor on every iteration
-            stages = make_kmeans_stages(dim, k, backend)
-            job = SphereJob("kmeans", file, stages,
-                            record_size=record_size, backend=backend)
-        stages[0].params = (jnp.asarray(centroids) if backend == "array"
-                            else centroids.copy())
-        if sess is not None:
-            outputs, report = sess.run(job, report)
-        else:
-            outputs, report = engine.run(job, report)
-        sums, counts = _fold_outputs(outputs, dim, k, backend)
-        nz = counts > 0
-        centroids[nz] = (sums[nz] / counts[nz, None]).astype(np.float32)
-        if iter_seconds is not None:
-            iter_seconds.append(time.perf_counter() - t0)
+    try:
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            if sess is None:
+                # re-plan + re-trace path: fresh stages, fresh job, fresh
+                # planner/executor on every iteration
+                stages = make_kmeans_stages(dim, k, backend)
+                job = SphereJob("kmeans", file, stages,
+                                record_size=record_size, backend=backend)
+            stages[0].params = (jnp.asarray(centroids) if backend == "array"
+                                else centroids.copy())
+            if sess is not None:
+                outputs, report = sess.run(job, report)
+            else:
+                outputs, report = engine.run(job, report)
+            sums, counts = _fold_outputs(outputs, dim, k, backend)
+            nz = counts > 0
+            centroids[nz] = (sums[nz] / counts[nz, None]).astype(np.float32)
+            if iter_seconds is not None:
+                iter_seconds.append(time.perf_counter() - t0)
+    finally:
+        if own_session:
+            sess.close()
     return centroids, report
+
+
+# --------------------------- streaming driver -------------------------------
+
+class StreamingKMeans:
+    """Warm-started k-means over a :class:`SphereStream`'s window sequence
+    (the continuous Angle workload: cluster every window of TCP-flow
+    feature files as it forms).
+
+    One stage pair and one :class:`SphereJob` serve every window: the
+    centroids ride in ``stages[0].params`` as a dynamic jit argument, so
+    the whole stream traces each stage exactly once
+    (``report.udf_traces == 1``) no matter how many windows or
+    iterations run.  Each window warm-starts from the previous window's
+    centroids — consecutive windows share most of their traffic, so warm
+    starts converge in fewer iterations than a cold random init, and the
+    model sequence itself is the temporal signal Angle's anomaly
+    detector consumes.
+
+    Typical wiring (fit runs synchronously as each window forms)::
+
+        stream = engine.stream("angle/window_", window=WindowPolicy.sliding(4),
+                               record_size=4 * dim, backend="array")
+        skm = StreamingKMeans(stream, dim, k, iters=4)
+        stream.on_window(lambda s, i, files: models.append(skm.fit_window()))
+    """
+
+    def __init__(self, stream, dim: int, k: int, *, iters: int = 4,
+                 seed: int = 0):
+        self.stream = stream
+        self.dim = dim
+        self.k = k
+        self.iters = iters
+        self.seed = seed
+        self.backend = stream.backend
+        self.stages = make_kmeans_stages(dim, k, self.backend)
+        self.job = SphereJob("kmeans-stream", stream.job_input_name,
+                             self.stages, record_size=stream.record_size,
+                             backend=self.backend)
+        self.centroids: Optional[np.ndarray] = None
+        self.report = SphereReport()
+        self.windows_fit = 0
+
+    def fit_window(self, iters: Optional[int] = None) -> np.ndarray:
+        """Fit the stream's *current* window, warm-starting from the
+        previous window's centroids (cold seeded init on the first call).
+        Returns a copy of the fitted centroids; cumulative counters
+        accrue in ``self.report``."""
+        if self.centroids is None:
+            rng = np.random.default_rng(self.seed)
+            self.centroids = rng.normal(size=(self.k, self.dim)) \
+                .astype(np.float32)
+        for _ in range(self.iters if iters is None else iters):
+            self.stages[0].params = (jnp.asarray(self.centroids)
+                                     if self.backend == "array"
+                                     else self.centroids.copy())
+            outs, self.report = self.stream.run(self.job, self.report)
+            sums, counts = _fold_outputs(outs, self.dim, self.k,
+                                         self.backend)
+            nz = counts > 0
+            self.centroids[nz] = (sums[nz] / counts[nz, None]) \
+                .astype(np.float32)
+        self.windows_fit += 1
+        return self.centroids.copy()
 
 
 # --------------------------- JAX twin ---------------------------------------

@@ -49,6 +49,12 @@ class SphereReport:
     # array backend: number of distinct shapes each pad-stable stage UDF
     # was traced with (1 = the jit-once guarantee held for that stage)
     udf_traces: Dict[str, int] = field(default_factory=dict)
+    # streams/sessions: stage-0 tasks that got FRESH replica placement
+    # this run vs. tasks replayed from a cached per-file plan — the
+    # delta-planning guarantee ("only new chunks are planned") is
+    # asserted on these two counters.
+    planned_tasks: int = 0
+    reused_tasks: int = 0
 
 
 @dataclass(frozen=True)
@@ -82,6 +88,54 @@ class StagePlan:
     speculation_wins: int
 
 
+class IncrementalPlan:
+    """A stage-0 plan grown per task *group* (one group per Sector file).
+
+    Streams extend the plan when a file enters the window — only the new
+    group is locality-scheduled — and ``retire`` a group when its file
+    leaves, without touching the surviving groups.  That makes per-window
+    planning cost proportional to the *delta*, not the window, and makes
+    retirement exact (a group's plan never depended on its neighbours).
+
+    Each group is planned independently from a clean per-job state, so
+    the merged view treats groups as running in parallel: the merged
+    makespan is the max of group makespans.  Cross-group contention for
+    a worker is not modelled — the same optimism ``plan_shuffle`` applies
+    to parallel flows — which is the price of extend-don't-rebuild.
+    """
+
+    def __init__(self):
+        self.groups: Dict[str, StagePlan] = {}  # insertion-ordered
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.groups
+
+    def __len__(self) -> int:
+        return len(self.groups)
+
+    def add(self, key: str, plan: StagePlan) -> None:
+        if key in self.groups:
+            raise ValueError(f"group {key!r} already planned")
+        self.groups[key] = plan
+
+    def retire(self, key: str) -> Optional[StagePlan]:
+        """Drop one group (its file left the window).  Surviving groups
+        are untouched.  Returns the retired plan, if any."""
+        return self.groups.pop(key, None)
+
+    def merged(self) -> StagePlan:
+        """The whole window's stage-0 plan: group tasks concatenated in
+        arrival order, counters summed, makespan = max over groups."""
+        groups = self.groups.values()
+        return StagePlan(
+            tuple(t for g in groups for t in g.tasks),
+            max((g.seconds for g in groups), default=0.0),
+            sum(g.bytes_local for g in groups),
+            sum(g.bytes_moved for g in groups),
+            sum(g.speculated for g in groups),
+            sum(g.speculation_wins for g in groups))
+
+
 class SpherePlanner:
     def __init__(self, *, speeds: Optional[Dict[str, float]] = None,
                  speculate_factor: float = 1.8,
@@ -101,6 +155,26 @@ class SpherePlanner:
         """Forget per-job speculation/straggler observations (called by
         the engine/session at each job boundary)."""
         self.job_stragglers.clear()
+
+    def extend_plan(self, inc: IncrementalPlan, key: str,
+                    tasks: Sequence[TaskSpec], workers: Sequence[str]
+                    ) -> Tuple[StagePlan, Dict[str, int]]:
+        """Plan ONE new group and add it to ``inc`` — the extend half of
+        extend-don't-rebuild.  The group is planned from a clean per-job
+        straggler state (group plans must not depend on arrival order),
+        and the planner's current job state is saved and restored, so
+        extending mid-job never perturbs the running job.  Returns the
+        group plan plus the straggler observations planning it produced,
+        for the caller to replay at each later job boundary."""
+        saved = self.job_stragglers
+        self.job_stragglers = {}
+        try:
+            plan = self.plan_stage(tasks, workers)
+            contrib = dict(self.job_stragglers)
+        finally:
+            self.job_stragglers = saved
+        inc.add(key, plan)
+        return plan, contrib
 
     def _speed(self, worker: str) -> float:
         return self.speeds.get(worker, 1.0)

@@ -9,13 +9,12 @@ UDF); this module exposes the generic combinators plus the distributed sort
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 try:
     from jax import shard_map as _shard_map

@@ -8,12 +8,11 @@ overlaps host-side chunk reads with device steps.
 from __future__ import annotations
 
 from collections import deque
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.data.dataset import Cursor, SectorTokenDataset
 from repro.parallel.sharding import ParallelConfig, batch_spec

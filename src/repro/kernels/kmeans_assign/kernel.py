@@ -10,7 +10,6 @@ Grid: (N / bn,). Outputs per point: argmin id (int32) and min distance.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -33,9 +33,8 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import ARCHS, SHAPES, cells, get_config
+from repro.configs import SHAPES, cells, get_config
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch.mesh import make_production_mesh
 from repro.models import model

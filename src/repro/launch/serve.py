@@ -11,10 +11,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, list_archs
-from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.models import model
 from repro.parallel.sharding import ParallelConfig
-from repro.serve import Request, SamplerConfig, ServeEngine
+from repro.serve import SamplerConfig, ServeEngine
 
 
 def main(argv=None):

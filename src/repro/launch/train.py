@@ -14,7 +14,6 @@ import argparse
 import json
 import tempfile
 
-import jax
 
 from repro.configs import get_config, list_archs
 from repro.data import DataPipeline, SectorTokenDataset, write_synthetic_corpus

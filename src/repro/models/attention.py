@@ -23,7 +23,6 @@ makes ``long_500k`` decodable for gemma3 / recurrentgemma.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -33,7 +32,7 @@ from jax import lax
 from repro.configs.base import ModelConfig
 from repro.models import common
 from repro.models.common import sds, soft_cap
-from repro.parallel.sharding import ParallelConfig, batch_spec, constrain, heads_spec
+from repro.parallel.sharding import ParallelConfig, constrain, heads_spec
 
 NEG_INF = -1e30
 
@@ -115,19 +114,19 @@ def _block(qc, kc, vc, qpos, kpos, *, causal, window, scale, softcap, extra_mask
 
 
 def _fold(carry, s, vc):
-    m, l, acc = carry
+    m, lsum, acc = carry
     m_new = jnp.maximum(m, s.max(axis=-1))
     alpha = jnp.exp(m - m_new)
     p = jnp.exp(s - m_new[..., None])
-    l = l * alpha + p.sum(axis=-1)
+    lsum = lsum * alpha + p.sum(axis=-1)
     pv = jnp.einsum("bkgts,bskd->bkgtd", p.astype(vc.dtype), vc,
                     preferred_element_type=jnp.float32)
     acc = acc * alpha[..., None] + pv
-    return m_new, l, acc
+    return m_new, lsum, acc
 
 
-def _finish(m, l, acc, B, Tq, K, G, D, dtype):
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+def _finish(m, lsum, acc, B, Tq, K, G, D, dtype):
+    out = acc / jnp.maximum(lsum, 1e-30)[..., None]
     # [B,K,G,T,D] -> [B,T,K*G,D]
     out = out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, K * G, D)
     return out.astype(dtype)
@@ -197,9 +196,9 @@ def chunked_attention(
         m0 = jnp.full((B, K, G, qc_sz), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, K, G, qc_sz), jnp.float32)
         a0 = jnp.zeros((B, K, G, qc_sz, D), jnp.float32)
-        (m, l, acc), _ = lax.scan(per_kv, (m0, l0, a0),
+        (m, lsum, acc), _ = lax.scan(per_kv, (m0, l0, a0),
                                   (jnp.arange(ns), k_r, v_r))
-        return None, _finish(m, l, acc, B, qc_sz, K, G, D, q.dtype)
+        return None, _finish(m, lsum, acc, B, qc_sz, K, G, D, q.dtype)
 
     _, outs = lax.scan(per_q, None, (jnp.arange(nq), q_r))
     return outs.transpose(1, 0, 2, 3, 4).reshape(B, T, H, D)
@@ -222,7 +221,7 @@ def _unrolled(q, k, v, B, T, S, K, G, D, qc_sz, kc_sz, window, scale,
         q_end = q_start + qc_sz
         qpos = q_start + jnp.arange(qc_sz)
         m = jnp.full((B, K, G, qc_sz), NEG_INF, jnp.float32)
-        l = jnp.zeros((B, K, G, qc_sz), jnp.float32)
+        lsum = jnp.zeros((B, K, G, qc_sz), jnp.float32)
         acc = jnp.zeros((B, K, G, qc_sz, D), jnp.float32)
         for ki in range(ns):
             k_start = ki * kc_sz
@@ -242,8 +241,8 @@ def _unrolled(q, k, v, B, T, S, K, G, D, qc_sz, kc_sz, window, scale,
                        qpos, k_start + jnp.arange(kc_sz),
                        causal=needs_mask, window=window if needs_mask else 0,
                        scale=scale, softcap=softcap)
-            m, l, acc = _fold((m, l, acc), s, vc)
-        outs.append(_finish(m, l, acc, B, qc_sz, K, G, D, q.dtype))
+            m, lsum, acc = _fold((m, lsum, acc), s, vc)
+        outs.append(_finish(m, lsum, acc, B, qc_sz, K, G, D, q.dtype))
     return jnp.concatenate(outs, axis=1).reshape(B, T, K * G, D)
 
 
@@ -266,10 +265,10 @@ def _windowed(q, k, v, B, T, S, K, G, D, qc_sz, window, scale, softcap,
         s = _block(qc, kc, vc, qpos, kpos, causal=True, window=window,
                    scale=scale, softcap=softcap)
         m = jnp.full((B, K, G, qc_sz), NEG_INF, jnp.float32)
-        l = jnp.zeros((B, K, G, qc_sz), jnp.float32)
+        lsum = jnp.zeros((B, K, G, qc_sz), jnp.float32)
         acc = jnp.zeros((B, K, G, qc_sz, D), jnp.float32)
-        m, l, acc = _fold((m, l, acc), s, vc)
-        return _finish(m, l, acc, B, qc_sz, K, G, D, q.dtype)
+        m, lsum, acc = _fold((m, lsum, acc), s, vc)
+        return _finish(m, lsum, acc, B, qc_sz, K, G, D, q.dtype)
 
     if unroll:
         outs = [one_q(qi, q[:, qi * qc_sz:(qi + 1) * qc_sz])

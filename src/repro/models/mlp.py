@@ -2,13 +2,11 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.common import activation, sds
 from repro.parallel.sharding import ParallelConfig, batch_spec, constrain
 
-from jax.sharding import PartitionSpec as P
 
 
 def shapes(cfg: ModelConfig, width: int | None = None) -> dict:

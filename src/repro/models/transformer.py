@@ -14,7 +14,6 @@ why the hybrid/ssm archs run ``long_500k``.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax

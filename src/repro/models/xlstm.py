@@ -19,7 +19,6 @@ recurrent weights (one block per head), exactly as published.
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

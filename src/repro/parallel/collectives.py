@@ -19,7 +19,6 @@ axis and *auto* over ``data``/``model`` (``ParallelConfig.mode ==
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ design — see DESIGN.md §4):
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 import jax

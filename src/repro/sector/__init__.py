@@ -1,5 +1,6 @@
 from repro.sector.chunk import ChunkMeta, FileMeta  # noqa: F401
 from repro.sector.client import SectorClient  # noqa: F401
+from repro.sector.events import EventBus, SectorEvent  # noqa: F401
 from repro.sector.master import SectorMaster  # noqa: F401
 from repro.sector.server import ChunkServer  # noqa: F401
 from repro.sector.topology import TERAFLOW_TESTBED, Topology  # noqa: F401

@@ -8,7 +8,7 @@ reads.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Set
+from typing import Set
 
 
 class AclError(PermissionError):

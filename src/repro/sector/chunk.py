@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Set
+from typing import List, Set
 
 
 CHUNK_SIZE = 64 * 1024 * 1024  # 64 MB default (GFS-style)

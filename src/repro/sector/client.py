@@ -13,9 +13,9 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
-from repro.sector.chunk import CHUNK_SIZE, checksum
+from repro.sector.chunk import checksum
 from repro.sector.master import SectorMaster
 from repro.sector.server import ServerDown
 from repro.sector.transport import simulate_transfer
@@ -72,6 +72,8 @@ class SectorClient:
                 digest = srv.write_chunk(cid, blob)
                 self.master.commit_chunk(cid, sid, len(blob), digest)
                 prev_site = srv.site
+        # every chunk committed: wake file-created subscribers (streams)
+        self.master.file_complete(name)
 
     def download(self, name: str) -> bytes:
         metas = self.master.lookup(name, self.user, self.site)

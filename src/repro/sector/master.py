@@ -21,6 +21,8 @@ from typing import Dict, List, Optional, Set, Tuple
 
 from repro.sector.acl import CommunityACL
 from repro.sector.chunk import CHUNK_SIZE, ChunkMeta, FileMeta
+from repro.sector.events import (CHUNK_REPLICATED, FILE_CREATED,
+                                 SERVER_DIED, SERVER_JOINED, EventBus)
 from repro.sector.server import ChunkServer
 from repro.sector.topology import TERAFLOW_TESTBED, Topology
 
@@ -105,34 +107,52 @@ class SectorMaster:
         self.acl = CommunityACL()
         self._heartbeat: Dict[str, float] = {}
         self.under_replicated: Set[str] = set()
+        # control-plane notifications: Sphere sessions/streams subscribe
+        # for membership invalidation and windowed file arrival
+        self.events = EventBus()
+        self.clock = 0.0  # last simulated time the master observed
+
+    def _tick(self, now: Optional[float] = None) -> float:
+        if now is not None:
+            self.clock = max(self.clock, now)
+        return self.clock
 
     # ------------------------------------------------------------ membership
     def register(self, server: ChunkServer, now: float = 0.0) -> None:
         self.servers[server.server_id] = server
         self.ring.add(server.server_id)
         self._heartbeat[server.server_id] = now
+        self.events.publish(SERVER_JOINED, time=self._tick(now),
+                            path=server.server_id, site=server.site)
 
-    def deregister(self, server_id: str) -> None:
+    def deregister(self, server_id: str, now: Optional[float] = None) -> None:
         """Graceful leave (or confirmed failure): drop from ring, flag every
         chunk that lost a replica."""
         self.ring.remove(server_id)
         self._heartbeat.pop(server_id, None)
+        lost = 0
         for ck in self.chunks.values():
             if server_id in ck.locations:
                 ck.locations.discard(server_id)
+                lost += 1
                 if len(ck.locations) < self._repl(ck.file):
                     self.under_replicated.add(ck.chunk_id)
+        self.events.publish(SERVER_DIED, time=self._tick(now),
+                            path=server_id, replicas_lost=lost,
+                            under_replicated=len(self.under_replicated))
 
     def heartbeat(self, server_id: str, now: float) -> None:
+        self._tick(now)
         if server_id in self.servers:
             self._heartbeat[server_id] = now
 
     def check_failures(self, now: float) -> List[str]:
         """Mark servers with stale heartbeats dead. Returns the failed ids."""
+        self._tick(now)
         dead = [s for s, t in self._heartbeat.items()
                 if now - t > self.heartbeat_timeout]
         for s in dead:
-            self.deregister(s)
+            self.deregister(s, now)
         return dead
 
     def _site_of(self) -> Dict[str, str]:
@@ -172,6 +192,18 @@ class SectorMaster:
         ck.digest = digest
         if len(ck.locations) >= self._repl(ck.file):
             self.under_replicated.discard(chunk_id)
+        self.events.publish(CHUNK_REPLICATED, time=self._tick(),
+                            path=chunk_id, server=server_id,
+                            replicas=len(ck.locations))
+
+    def file_complete(self, name: str, now: Optional[float] = None) -> None:
+        """Publish ``file-created``: every chunk of ``name`` is committed
+        and readers may start.  The upload client calls this last, so the
+        event always trails the file's ``chunk-replicated`` events —
+        a stream woken by it can plan and read immediately."""
+        fm = self.files[name]
+        self.events.publish(FILE_CREATED, time=self._tick(now), path=name,
+                            size=fm.size, chunks=fm.n_chunks)
 
     # --------------------------------------------------------------- lookup
     def lookup(self, name: str, user: str = "public",

@@ -23,11 +23,21 @@ class Topology:
     sites: List[str]
     links: Dict[Tuple[str, str], Link] = field(default_factory=dict)
     local: Link = Link(10e9, 0.0002, 1e-7)  # intra-site LAN
+    # Fallback for site pairs with no configured link — e.g. a server
+    # joining from a site the testbed config predates.  Placement and
+    # transfers must keep working when membership grows, so ``link``
+    # falls back to this deliberately pessimistic commodity WAN path
+    # (1 Gbps, 250 ms RTT, lossy — strictly worse than every provisioned
+    # testbed route) instead of raising KeyError; the cost model then
+    # naturally steers locality-aware scheduling and nearest-replica
+    # reads away from the unprovisioned route.
+    default_wan: Link = Link(1e9, 0.250, 5.1e-4)
 
     def link(self, a: str, b: str) -> Link:
         if a == b:
             return self.local
-        return self.links.get((a, b)) or self.links[(b, a)]
+        got = self.links.get((a, b)) or self.links.get((b, a))
+        return got if got is not None else self.default_wan
 
     def add(self, a: str, b: str, bandwidth_bps: float, rtt_s: float,
             loss: float) -> None:

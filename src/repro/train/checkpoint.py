@@ -21,7 +21,7 @@ import io
 import json
 import re
 import zlib
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,7 +66,7 @@ def deserialize(payload: bytes, manifest: dict, like_tree) -> Any:
     if hashlib.sha256(payload).hexdigest() != manifest["payload_sha256"]:
         raise IOError("checkpoint payload hash mismatch")
     raw = zlib.decompress(payload)
-    by_path = {l["path"]: l for l in manifest["leaves"]}
+    by_path = {leaf["path"]: leaf for leaf in manifest["leaves"]}
     flat = tree_flatten_with_paths(like_tree)
     leaves = []
     for path, like in flat:

@@ -23,7 +23,6 @@ from typing import Callable, List, Optional
 
 import jax
 
-from repro.parallel.sharding import ParallelConfig
 from repro.train.trainer import Trainer
 
 

@@ -6,7 +6,6 @@ over ``data`` x TP over ``model`` and replicated over ``pod``).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Callable, Dict
 
@@ -40,7 +39,8 @@ def warmup_cosine(lr: float, warmup: int, total: int) -> Callable:
 
 def state_shapes(param_tree, ocfg: AdamWConfig) -> Dict:
     """ShapeDtypeStruct tree for the optimizer state."""
-    f32 = lambda s: sds(s.shape, jnp.float32)
+    def f32(s):
+        return sds(s.shape, jnp.float32)
     out = {
         "step": sds((), jnp.int32),
         "m": jax.tree.map(f32, param_tree),

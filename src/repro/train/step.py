@@ -15,8 +15,7 @@ shuffle = the cross-pod gradient reduction, stage 2 = optimizer UDF.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import model
-from repro.models.common import sds
 from repro.parallel import collectives
 from repro.parallel.sharding import (ParallelConfig, batch_spec,
                                      kv_cache_spec, param_specs_for)

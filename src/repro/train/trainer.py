@@ -2,11 +2,10 @@
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import DataPipeline
@@ -14,7 +13,7 @@ from repro.models import model
 from repro.parallel.sharding import ParallelConfig, param_specs_for
 from repro.train import optim
 from repro.train.checkpoint import SectorCheckpointer
-from repro.train.step import (batch_specs_for, make_train_step,
+from repro.train.step import (make_train_step,
                               opt_state_specs_for, to_shardings)
 
 

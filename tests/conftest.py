@@ -4,7 +4,6 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import numpy as np
 import pytest
 
 # NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests

@@ -2,7 +2,6 @@
 import pytest
 
 from repro.configs import ARCHS, cells, get_config
-from repro.configs.base import SHAPES
 
 # Published (approximate) parameter counts, billions.
 PUBLISHED_B = {

@@ -1,6 +1,5 @@
 """Elastic scaling: failure -> remesh -> checkpoint-restore -> resume."""
 import jax
-import numpy as np
 import pytest
 
 from conftest import make_cloud

@@ -1,0 +1,194 @@
+"""Sector event bus: deterministic synchronous pub/sub.
+
+Covers the delivery contract streams rely on — monotonic sequence
+numbers, delivery order == publish order even for re-entrant publishes,
+type/prefix filtering — and the master's publication points (membership,
+upload completion, chunk commits), including ordering under a
+"simultaneous" join + death at the same simulated time."""
+import pytest
+
+from conftest import make_cloud
+from repro.sector import ChunkServer
+from repro.sector.events import (CHUNK_REPLICATED, FILE_CREATED,
+                                 SERVER_DIED, SERVER_JOINED, EventBus)
+
+
+# ------------------------------- bus core -----------------------------------
+
+def test_subscribe_filters_type_and_prefix():
+    bus = EventBus()
+    got = []
+    bus.subscribe(lambda e: got.append(("typed", e.type)),
+                  types=(FILE_CREATED,))
+    bus.subscribe(lambda e: got.append(("prefixed", e.path)),
+                  prefix="angle/")
+    bus.subscribe(lambda e: got.append(("all", e.seq)))
+
+    bus.publish(FILE_CREATED, path="angle/w0")
+    bus.publish(SERVER_JOINED, path="s9")
+    assert got == [("typed", FILE_CREATED), ("prefixed", "angle/w0"),
+                   ("all", 0), ("all", 1)]
+
+
+def test_unknown_types_rejected():
+    bus = EventBus()
+    with pytest.raises(ValueError, match="unknown event type"):
+        bus.publish("file-craeted")
+    with pytest.raises(ValueError, match="unknown event types"):
+        bus.subscribe(lambda e: None, types=("server-joned",))
+
+
+def test_unsubscribe_stops_delivery():
+    bus = EventBus()
+    got = []
+    sub = bus.subscribe(lambda e: got.append(e.seq))
+    bus.publish(SERVER_JOINED, path="a")
+    bus.unsubscribe(sub)
+    bus.unsubscribe(sub)  # idempotent
+    bus.publish(SERVER_JOINED, path="b")
+    assert got == [0]
+
+
+def test_seq_monotonic_and_history():
+    bus = EventBus(history=4)
+    for i in range(6):
+        bus.publish(SERVER_JOINED, path=f"s{i}", time=float(i))
+    assert [e.seq for e in bus.history] == [2, 3, 4, 5]  # bounded
+    assert [e.path for e in bus.history] == ["s2", "s3", "s4", "s5"]
+
+
+def test_reentrant_publish_is_queued_breadth_first():
+    """A publish from inside a callback must not interleave: the nested
+    event is delivered to EVERY subscriber after the current event
+    finishes its full delivery round, in seq order."""
+    bus = EventBus()
+    order = []
+
+    def reactor(e):
+        order.append(("reactor", e.type, e.seq))
+        if e.type == SERVER_DIED:
+            # standby replacement: publish while delivering
+            bus.publish(SERVER_JOINED, path="standby", time=e.time)
+
+    bus.subscribe(reactor)
+    bus.subscribe(lambda e: order.append(("audit", e.type, e.seq)))
+    bus.publish(SERVER_DIED, path="s0", time=9.0)
+
+    assert order == [("reactor", SERVER_DIED, 0),
+                     ("audit", SERVER_DIED, 0),
+                     ("reactor", SERVER_JOINED, 1),
+                     ("audit", SERVER_JOINED, 1)]
+
+
+def test_raising_subscriber_does_not_corrupt_delivery():
+    """A raising callback must not leave the bus half-delivered: later
+    subscribers still see the event, queued re-entrant events still
+    drain in order (nothing leaks into the next publish), and the first
+    error re-raises to the publisher after the drain."""
+    bus = EventBus()
+    got = []
+
+    def reactor(e):
+        if e.type == SERVER_DIED:
+            bus.publish(SERVER_JOINED, path="standby")  # re-entrant
+            raise RuntimeError("subscriber boom")
+
+    bus.subscribe(reactor)
+    bus.subscribe(lambda e: got.append((e.type, e.seq)))
+    with pytest.raises(RuntimeError, match="subscriber boom"):
+        bus.publish(SERVER_DIED, path="s0")
+    # both the failing event AND the queued standby join were delivered
+    assert got == [(SERVER_DIED, 0), (SERVER_JOINED, 1)]
+    assert not bus._queue                      # nothing left to leak
+    bus.publish(SERVER_JOINED, path="later")   # clean next publish
+    assert got[-1] == (SERVER_JOINED, 2)
+
+
+def test_base_exception_aborts_without_leaking_queued_events():
+    """A BaseException (Ctrl-C through a long window callback) aborts
+    the drain — but the undelivered remainder must be dropped, not
+    delivered at the front of the next unrelated publish."""
+    bus = EventBus()
+    got = []
+
+    def interrupter(e):
+        if e.type == SERVER_DIED:
+            bus.publish(SERVER_JOINED, path="queued-behind")
+            raise KeyboardInterrupt
+
+    bus.subscribe(interrupter)
+    bus.subscribe(lambda e: got.append((e.type, e.path)))
+    with pytest.raises(KeyboardInterrupt):
+        bus.publish(SERVER_DIED, path="s0")
+    assert not bus._queue                       # aborted remainder dropped
+    bus.publish(SERVER_JOINED, path="later")
+    assert (SERVER_JOINED, "queued-behind") not in got
+    assert got[-1] == (SERVER_JOINED, "later")
+
+
+# --------------------------- master publication ------------------------------
+
+def test_simultaneous_join_and_death_ordering(tmp_path):
+    """One heartbeat sweep kills a stale server while a replacement
+    registers at the same simulated instant: every subscriber observes
+    the same total order (publish order, strictly increasing seq), and
+    both events carry the same clock value."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1024)
+    client.upload("f", b"x" * 3000, replication=2)
+    got = []
+    master.events.subscribe(
+        lambda e: got.append(e), types=(SERVER_JOINED, SERVER_DIED))
+
+    t = master.heartbeat_timeout + 5.0
+    for s in servers[1:]:
+        master.heartbeat(s.server_id, t)
+    servers[0].kill()
+    # the same instant: replacement joins, sweep detects the death
+    master.register(ChunkServer("fresh", "tokyo", tmp_path), now=t)
+    dead = master.check_failures(t)
+    assert dead == [servers[0].server_id]
+
+    assert [(e.type, e.path) for e in got] == \
+        [(SERVER_JOINED, "fresh"), (SERVER_DIED, servers[0].server_id)]
+    assert [e.seq for e in got] == sorted(e.seq for e in got)
+    assert got[0].seq < got[1].seq
+    assert got[0].time == got[1].time == t
+
+
+def test_upload_publishes_commits_then_file_created(tmp_path):
+    """file-created trails every chunk-replicated of the file — a stream
+    woken by it can read immediately — and carries size/chunk detail."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1024)
+    got = []
+    master.events.subscribe(lambda e: got.append(e),
+                            types=(FILE_CREATED, CHUNK_REPLICATED))
+    client.upload("d/f", b"z" * 2500, replication=2)
+
+    kinds = [e.type for e in got]
+    assert kinds.index(FILE_CREATED) == len(kinds) - 1  # strictly last
+    assert kinds.count(CHUNK_REPLICATED) == 3 * 2       # 3 chunks x 2 replicas
+    created = got[-1]
+    assert created.path == "d/f"
+    assert created.detail == {"size": 2500, "chunks": 3}
+    # replica counts ramp 1..replication per chunk
+    per_chunk = {}
+    for e in got[:-1]:
+        per_chunk.setdefault(e.path, []).append(e.detail["replicas"])
+    assert all(v == [1, 2] for v in per_chunk.values())
+
+
+def test_repair_publishes_chunk_replicated(tmp_path):
+    """Re-replication after a death re-announces the restored replicas."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1024)
+    client.upload("f", b"q" * 2000, replication=2)
+    got = []
+    master.events.subscribe(lambda e: got.append(e),
+                            types=(CHUNK_REPLICATED,))
+    victim = next(iter(master.chunks.values()))
+    sid = next(iter(victim.locations))
+    master.servers[sid].kill()
+    master.deregister(sid)
+    assert master.under_replicated
+    client.run_repair()
+    assert not master.under_replicated
+    assert any(e.detail["replicas"] >= 2 for e in got)

@@ -5,7 +5,8 @@ isolation — these tests drive SpherePlanner with synthetic tasks, speeds
 and link costs and assert on the StagePlan alone."""
 import pytest
 
-from repro.core.planner import (PROCESS_RATE, SpherePlanner, TaskSpec)
+from repro.core.planner import (PROCESS_RATE, IncrementalPlan,
+                                SpherePlanner, TaskSpec)
 
 
 def _tasks(sizes, locs):
@@ -85,6 +86,54 @@ def test_stage_seconds_scale_with_speed():
 def test_empty_stage_plan():
     plan = SpherePlanner().plan_stage([], ["a"])
     assert plan.tasks == () and plan.seconds == 0.0
+
+
+def test_incremental_plan_extend_and_retire():
+    """Extend plans only the new group; retire drops a group without
+    touching the survivors (same plan objects); merged() sums counters
+    and takes the max makespan (groups run in parallel)."""
+    p = SpherePlanner()
+    inc = IncrementalPlan()
+    a_plan, _ = p.extend_plan(inc, "a", _tasks([100, 200], [("w1",), ("w2",)]),
+                              ["w1", "w2"])
+    b_plan, _ = p.extend_plan(inc, "b", _tasks([400], [("w1",)]),
+                              ["w1", "w2"])
+    assert "a" in inc and "b" in inc and len(inc) == 2
+    m = inc.merged()
+    assert len(m.tasks) == 3
+    assert m.bytes_local == 700
+    assert m.seconds == pytest.approx(max(a_plan.seconds, b_plan.seconds))
+    # group plans are exactly what a standalone plan would produce
+    assert a_plan == p.plan_stage(_tasks([100, 200], [("w1",), ("w2",)]),
+                                  ["w1", "w2"])
+
+    assert inc.retire("a") is a_plan
+    assert inc.retire("a") is None          # idempotent
+    assert inc.groups["b"] is b_plan        # survivor untouched
+    assert inc.merged() == b_plan
+
+    with pytest.raises(ValueError, match="already planned"):
+        p.extend_plan(inc, "b", _tasks([1], [("w1",)]), ["w1"])
+
+
+def test_extend_plan_isolates_job_straggler_state():
+    """Extending mid-job must not perturb the running job's straggler
+    observations, and each group is planned from a clean state — its
+    contribution is returned for the caller to replay."""
+    p = SpherePlanner(speeds={"slow": 0.02, "fast": 1.0},
+                      speculate_factor=1.5)
+    p.job_stragglers["elsewhere"] = 7       # running job's state
+    inc = IncrementalPlan()
+    tasks = [TaskSpec(f"c{i}", 1000, ("slow", "fast")) for i in range(40)]
+    plan, contrib = p.extend_plan(inc, "f", tasks, ["slow", "fast"])
+    assert plan.speculated > 0
+    assert contrib.get("slow", 0) > 0       # observed while planning "f"
+    assert p.job_stragglers == {"elsewhere": 7}  # untouched
+
+
+def test_empty_incremental_plan_merges_to_empty_stage():
+    m = IncrementalPlan().merged()
+    assert m.tasks == () and m.seconds == 0.0 and m.bytes_moved == 0
 
 
 def test_shuffle_charges_actual_origins():

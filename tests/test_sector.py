@@ -93,6 +93,50 @@ def test_scrubbing_detects_corruption(tmp_path):
     assert client.download("f") == b"z" * 3000  # healthy replica survives
 
 
+def test_scrubbing_requeues_and_repair_restores(tmp_path):
+    """verify_all is not just detection: a corrupt replica drops out of
+    the chunk's location set and the chunk re-enters the
+    under-replicated queue, so the next repair pass restores full
+    replication and a re-scrub comes back clean."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1024)
+    client.upload("f", b"z" * 3000, replication=2)
+    daemon = ReplicationDaemon(master, client)
+    ck = next(iter(master.chunks.values()))
+    sid = next(iter(ck.locations))
+    master.servers[sid]._path(ck.chunk_id).write_bytes(b"CORRUPTED!")
+
+    rep = daemon.verify_all()
+    assert rep["bad"] == 1
+    assert sid not in ck.locations              # bad replica dropped
+    assert ck.chunk_id in master.under_replicated  # re-queued for repair
+
+    assert client.run_repair() >= 1
+    assert not master.under_replicated
+    assert len(ck.locations) >= 2               # replication restored
+    rep2 = daemon.verify_all()                  # every replica healthy now
+    assert rep2["bad"] == 0
+    assert rep2["ok"] == sum(len(c.locations) for c in
+                             master.chunks.values())
+    assert client.download("f") == b"z" * 3000
+
+
+def test_scrubbing_with_all_replicas_bad_reports_loss(tmp_path):
+    """Every replica corrupt: the chunk stays queued but repair has no
+    clean source — verify_all must not mask the loss."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1024)
+    client.upload("f", b"z" * 500, replication=2)
+    ck = next(iter(master.chunks.values()))
+    for sid in list(ck.locations):
+        master.servers[sid]._path(ck.chunk_id).write_bytes(b"BAD")
+    daemon = ReplicationDaemon(master, client)
+    rep = daemon.verify_all()
+    assert rep["bad"] == 2
+    assert ck.chunk_id in master.under_replicated
+    assert client.run_repair() == 0             # nothing clean to copy
+    with pytest.raises(IOError):
+        client.download("f")
+
+
 def test_data_loss_reported(tmp_path):
     master, servers, client = make_cloud(tmp_path, chunk_size=1024,
                                          n_servers=3)
@@ -127,6 +171,39 @@ def test_acl_semantics(tmp_path):
     with pytest.raises(AclError):
         pub.download("open-data")
     assert bob.download("open-data") == b"hello"
+
+
+# ------------------------------- topology -----------------------------------
+
+def test_unconfigured_site_pair_falls_back_to_default_wan():
+    """A site pair with no configured link must not crash placement:
+    link() returns the documented default WAN path, and it is worse than
+    every provisioned testbed route so locality steering still prefers
+    configured links."""
+    wan = TERAFLOW_TESTBED.link("chicago", "atlantis")
+    assert wan == TERAFLOW_TESTBED.default_wan
+    assert TERAFLOW_TESTBED.link("atlantis", "mu") == wan  # both unknown
+    assert TERAFLOW_TESTBED.link("a", "a") == TERAFLOW_TESTBED.local
+    for (a, b), real in TERAFLOW_TESTBED.links.items():
+        assert wan.bandwidth_bps < real.bandwidth_bps
+        assert TERAFLOW_TESTBED.distance(a, b) <= wan.rtt_s
+    t = simulate_transfer(1 << 20, wan, "udt")
+    assert t.seconds > 0
+
+
+def test_server_at_unknown_site_joins_and_serves(tmp_path):
+    """End-to-end: a chunk server joining from a site the testbed config
+    predates can receive uploads and serve reads over the default WAN
+    link instead of raising KeyError during placement."""
+    from repro.sector import ChunkServer
+
+    master, servers, client = make_cloud(tmp_path, chunk_size=1024,
+                                         n_servers=3)
+    master.register(ChunkServer("edge", "atlantis", tmp_path))
+    data = b"w" * 5000
+    client.upload("f", data, replication=4)  # must reach all 4, edge too
+    assert any("edge" in ck.locations for ck in master.chunks.values())
+    assert client.download("f") == data
 
 
 # ------------------------------- transport ----------------------------------

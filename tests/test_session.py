@@ -236,11 +236,61 @@ def test_session_reports_agree_across_backends(tmp_path):
             == _report_key(results["array"][1]))
 
 
-def test_session_refresh_drops_caches(tmp_path):
-    """refresh() drops the cached lookup, placement and chunks so the
-    next job re-derives them (for after membership/data changes)."""
+def test_session_invalidates_on_join_event(tmp_path):
+    """A server-joined event auto-drops the cached lookup, placement and
+    chunks: the next job re-derives them against the grown cluster — no
+    manual refresh() call anywhere."""
+    from repro.sector import ChunkServer
+
     master, servers, client = make_cloud(tmp_path, chunk_size=1000)
-    _upload(client, "f", n=30, replication=3)
+    data = _upload(client, "f", n=30, replication=3)
+    reads = []
+    orig_read = client.read_chunk
+    client.read_chunk = lambda *a, **k: reads.append(a) or orig_read(*a, **k)
+
+    eng = SphereEngine(master, client)
+    sess = eng.session("f", record_size=REC, backend="array")
+    sess.run(_identity_job("array"))
+    n_reads = len(reads)
+    assert n_reads > 0
+    sess.run(_identity_job("array"))
+    assert len(reads) == n_reads        # all cached
+
+    master.register(ChunkServer("late", "tokyo", tmp_path))  # join event
+    assert len(sess._plan) == 0         # caches dropped by the event
+    outs, rep = sess.run(_identity_job("array"))
+    assert len(reads) == 2 * n_reads    # re-fetched after invalidation
+    assert "late" in sess.workers
+    want_outs, want_rep = eng.run(_identity_job("array"))
+    assert outs == want_outs            # schedules like a fresh run
+    assert _report_key(rep) == _report_key(want_rep)
+    assert sorted(b"".join(outs)) == sorted(data)
+
+
+def test_session_invalidates_on_death_event(tmp_path):
+    """After a worker dies, the server-died event re-binds the session to
+    the live worker set: it schedules exactly like a fresh engine.run on
+    the shrunken cluster instead of planning onto the dead worker."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    _upload(client, "f", n=60, replication=3)
+    eng = SphereEngine(master, client)
+    sess = eng.session("f", record_size=REC, backend="array")
+    sess.run(_identity_job("array"))
+
+    servers[1].kill()
+    master.deregister(servers[1].server_id)  # death event -> auto-invalidate
+    assert servers[1].server_id not in sess.workers
+    outs, rep = sess.run(_identity_job("array"))
+    want_outs, want_rep = eng.run(_identity_job("array"))
+    assert outs == want_outs
+    assert _report_key(rep) == _report_key(want_rep)
+
+
+def test_session_refresh_is_deprecated_noop(tmp_path):
+    """refresh() survives as a deprecated alias that warns and keeps the
+    caches intact (invalidation is the event bus's job now)."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    _upload(client, "f", n=20, replication=3)
     reads = []
     orig_read = client.read_chunk
     client.read_chunk = lambda *a, **k: reads.append(a) or orig_read(*a, **k)
@@ -249,35 +299,11 @@ def test_session_refresh_drops_caches(tmp_path):
                                                 backend="array")
     want, _ = sess.run(_identity_job("array"))
     n_reads = len(reads)
-    assert n_reads > 0
-    sess.run(_identity_job("array"))
-    assert len(reads) == n_reads        # all cached
-
-    sess.refresh()
-    assert sess._stage0_tasks is None and sess._stage0_plan is None
+    with pytest.warns(DeprecationWarning, match="no-op"):
+        sess.refresh()
     outs, _ = sess.run(_identity_job("array"))
-    assert len(reads) == 2 * n_reads    # re-fetched after refresh
+    assert len(reads) == n_reads        # caches survived the no-op
     assert outs == want
-
-
-def test_session_refresh_rebinds_membership(tmp_path):
-    """After a worker dies, refresh() re-derives the live worker set: the
-    session schedules exactly like a fresh engine.run on the shrunken
-    cluster instead of planning onto the dead worker."""
-    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
-    _upload(client, "f", n=60, replication=3)
-    eng = SphereEngine(master, client)
-    sess = eng.session("f", record_size=REC, backend="array")
-    sess.run(_identity_job("array"))
-
-    servers[1].kill()
-    master.deregister(servers[1].server_id)
-    sess.refresh()
-    assert servers[1].server_id not in sess.workers
-    outs, rep = sess.run(_identity_job("array"))
-    want_outs, want_rep = eng.run(_identity_job("array"))
-    assert outs == want_outs
-    assert _report_key(rep) == _report_key(want_rep)
 
 
 def test_session_chunk_cache_survives_mutating_udf(tmp_path):
@@ -355,6 +381,56 @@ def test_kmeans_session_traces_once_and_matches_rebuild(tmp_path):
     assert stages[0]._traced.traces == 1
     assert stages[1]._traced.traces == 1
     np.testing.assert_allclose(res[True], res[False], rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_sphere_init_warm_start(tmp_path):
+    """kmeans_sphere(init=...) overrides the seeded random init — the
+    warm-start hook for chained window models: one iteration from a
+    given model equals the numpy step from that model, and a mis-shaped
+    init is rejected."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=4096)
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(256, 4)).astype(np.float32)
+    client.upload("pts", encode_points(pts), replication=2)
+    eng = SphereEngine(master, client)
+
+    init = np.array([[-1, -1, -1, -1], [1, 1, 1, 1]], np.float32)
+    cents, _ = kmeans_sphere(eng, "pts", dim=4, k=2, iters=1,
+                             backend="array", init=init)
+    a = ((pts[:, None, :] - init[None]) ** 2).sum(-1).argmin(1)
+    want = init.copy()
+    for j in range(2):
+        if (a == j).any():
+            want[j] = pts[a == j].mean(0)
+    np.testing.assert_allclose(cents, want, rtol=1e-4, atol=1e-4)
+
+    with pytest.raises(ValueError, match="init shape"):
+        kmeans_sphere(eng, "pts", dim=4, k=2, iters=1, backend="array",
+                      init=np.zeros((3, 4), np.float32))
+
+
+def test_unclosed_session_is_garbage_collected(tmp_path):
+    """The event bus must not keep an unclosed session alive (the
+    pre-stream idiom never called close()): dropping the last reference
+    frees the session and its caches, and the dead subscription
+    self-unsubscribes on the next event."""
+    import gc
+    import weakref
+
+    from repro.sector import ChunkServer
+
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    _upload(client, "f", n=10)
+    eng = SphereEngine(master, client)
+    sess = eng.session("f", record_size=REC, backend="array")
+    sess.run(_identity_job("array"))
+    n_subs = len(master.events._subs)
+    ref = weakref.ref(sess)
+    del sess
+    gc.collect()
+    assert ref() is None                      # bus held no strong ref
+    master.register(ChunkServer("late2", "tokyo", tmp_path))
+    assert len(master.events._subs) < n_subs  # dead subs self-removed
 
 
 @pytest.mark.parametrize("backend", ["bytes", "array"])

@@ -1,12 +1,10 @@
 """Sharding rules + spec validation (no multi-device needed)."""
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS
 from repro.models import model
-from repro.models.common import sds
 from repro.parallel.sharding import (ParallelConfig, param_specs_for,
                                      spec_matches, validate_spec)
 from repro.utils.pytree import tree_flatten_with_paths

@@ -156,7 +156,8 @@ def test_custom_callable_partitioner_fallback():
     """Arbitrary Python partitioners still work on the array backend via
     the host loop fallback of partition_batch."""
     blob, records = _random_records(40, 8, seed=9)
-    part = (lambda r, n: r[0] % n)
+    def part(r, n):
+        return r[0] % n
     batch = RecordBatch.from_bytes(blob, 8)
     ids, hist = partition_batch(batch, part, 3)
     ref = [r[0] % 3 for r in records]

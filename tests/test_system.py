@@ -4,10 +4,7 @@ Corpus -> Sector (replicated chunks) -> locality-aware pipeline ->
 Sphere-staged train step -> Sector-replicated checkpoints -> kill a chunk
 server mid-run -> repair -> resume -> serve the trained weights.
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from conftest import make_cloud
 from repro.configs import ARCHS

@@ -7,7 +7,6 @@ import pytest
 from conftest import make_cloud
 from repro.configs import ARCHS
 from repro.data import DataPipeline, SectorTokenDataset, write_synthetic_corpus
-from repro.models import model
 from repro.parallel.sharding import ParallelConfig
 from repro.train import SectorCheckpointer, Trainer, TrainerConfig, optim
 from repro.train.checkpoint import deserialize, serialize
