@@ -30,6 +30,13 @@ WATCHED = [
      ("result", "host", "sphere_array", "partition_rec_per_s"), "abs"),
     ("BENCH_table3_terasort.json",
      ("result", "host", "speedup"), "ratio"),
+    # engine-level scale sweep, flagship (largest) scale: the warm
+    # device-resident scatter through the whole engine must stay ahead
+    # of the bytes backend (ratio) and keep its absolute throughput
+    ("BENCH_table3_terasort.json",
+     ("result", "host_scales", -1, "array_rec_per_s"), "abs"),
+    ("BENCH_table3_terasort.json",
+     ("result", "host_scales", -1, "array_over_bytes"), "ratio"),
     # k-means session path: steady-state per-iteration throughput and the
     # session-vs-per-iteration-rebuild speedup (one planner/lookup/trace
     # for the whole chain) — gated like partitioning so iteration stays
@@ -50,14 +57,17 @@ WATCHED = [
 
 def _dig(obj, path):
     for p in path:
-        if not isinstance(obj, dict) or p not in obj:
+        if isinstance(p, int):  # list index (negative = from the end)
+            if not isinstance(obj, list) or not -len(obj) <= p < len(obj):
+                return None
+        elif not isinstance(obj, dict) or p not in obj:
             return None
         obj = obj[p]
     return obj
 
 
 def _metric_id(fname, path):
-    return f"{fname}:{'.'.join(path)}"
+    return f"{fname}:{'.'.join(str(p) for p in path)}"
 
 
 def collect(current_dir: str) -> dict:

@@ -1,0 +1,103 @@
+"""Markdown link checker for the repo's docs — no external deps.
+
+    python scripts/check_markdown_links.py [FILE_OR_DIR ...]
+
+Defaults to ``README.md`` and ``docs/`` at the repo root. For every
+markdown file it validates:
+
+- **relative links** (``[x](docs/ARCHITECTURE.md)``): the target file
+  or directory must exist, resolved against the linking file's
+  directory;
+- **anchors** (``[x](BENCHMARKS.md#the-regression-gate)`` or
+  ``[x](#local)``): the target file must contain a heading whose
+  GitHub-style slug matches the fragment.
+
+External links (``http(s)://``, ``mailto:``) are **not** fetched — CI
+must not depend on network reachability — but a relative link into a
+path that does not exist, or to a heading that was renamed, fails the
+run. Image links (``![...](...)``) follow the same rules. Exits
+non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) — also matches images via the preceding "!", which
+# need the same existence check. Nested parens are not used in our docs.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces -> dashes."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(md_path: str) -> set:
+    with open(md_path, encoding="utf-8") as f:
+        text = _CODE_FENCE.sub("", f.read())
+    slugs: dict = {}
+    out = set()
+    for m in _HEADING.finditer(text):
+        s = _slug(m.group(1))
+        n = slugs.get(s, 0)
+        slugs[s] = n + 1
+        out.add(s if n == 0 else f"{s}-{n}")  # duplicate headings: -1, -2…
+    return out
+
+
+def check_file(md_path: str) -> list:
+    """Returns a list of 'file: link — reason' problem strings."""
+    with open(md_path, encoding="utf-8") as f:
+        text = _CODE_FENCE.sub("", f.read())
+    base = os.path.dirname(os.path.abspath(md_path))
+    problems = []
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path, _, frag = target.partition("#")
+        # ../../actions/... style badge links leave the repo; GitHub
+        # serves them regardless of checkout layout, so skip them
+        if path.startswith("../.."):
+            continue
+        full = os.path.normpath(os.path.join(base, path)) if path else md_path
+        if not os.path.exists(full):
+            problems.append(f"{md_path}: {target} — missing file {full}")
+            continue
+        if frag:
+            if not full.endswith(".md"):
+                continue  # anchors into non-markdown: browser's problem
+            if frag not in _anchors(full):
+                problems.append(f"{md_path}: {target} — no heading for "
+                                f"#{frag} in {full}")
+    return problems
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:]) or ["README.md",
+                                                            "docs"]
+    files = []
+    for a in args:
+        if os.path.isdir(a):
+            files.extend(os.path.join(a, f) for f in sorted(os.listdir(a))
+                         if f.endswith(".md"))
+        else:
+            files.append(a)
+    problems = []
+    for f in files:
+        problems.extend(check_file(f))
+    for p in problems:
+        print(f"BROKEN {p}")
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if problems else 'ok'} ({len(problems)} broken)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,8 +33,8 @@ import jax.numpy as jnp
 
 from repro.core.job import SphereJob, SphereStage
 from repro.core.planner import SphereReport, StagePlan
-from repro.core.records import RecordBatch, scatter_by_ids
-from repro.core.shuffle import partition_batch
+from repro.core.records import RecordBatch
+from repro.core.shuffle import scatter_batch
 from repro.sector.server import ServerDown
 
 # per-bucket origin accounting: origins[i][worker] = bytes of bucket i
@@ -316,10 +316,15 @@ class ArrayExecutor(_ExecutorBase):
     # ----------------------------------------------------------- shuffle
     def bucketize(self, stage: SphereStage, out, n: int, rep: SphereReport
                   ) -> Tuple[List[List[RecordBatch]], Origins]:
-        """Array shuffle: per worker, one Pallas bucket-partition kernel
-        call (ids + histogram) and one argsort/segment gather.  Records
-        never leave the device; only the tiny ids/hist arrays come back
-        to the host to drive the gather."""
+        """Array shuffle: per worker, one device-resident
+        ``bucket_scatter`` kernel call — ids, per-block histograms and
+        intra-block ranks on device, then a device scatter into
+        bucket-contiguous order.  Bucket ids never reach the host; the
+        one host sync per worker batch is the final per-bucket histogram
+        that slices the contiguous result (the same counts the planner's
+        movement pricing consumes via ``origins``).  Batches pad to
+        power-of-two row counts (floored at ``pad_block``), so the
+        kernel traces once per padded shape, not once per batch size."""
         buckets: List[List[RecordBatch]] = [[] for _ in range(n)]
         origins: Origins = [{} for _ in range(n)]
         t0 = time.perf_counter()
@@ -327,8 +332,9 @@ class ArrayExecutor(_ExecutorBase):
             if not out[w]:
                 continue
             batch = RecordBatch.concat(out[w])
-            ids, hist = partition_batch(batch, stage.partitioner, n)
-            for i, piece in enumerate(scatter_by_ids(batch, ids, hist)):
+            pieces = scatter_batch(batch, stage.partitioner, n,
+                                   pad_block=self.pad_block)
+            for i, piece in enumerate(pieces):
                 if piece.num_records:
                     buckets[i].append(piece)
                     origins[i][w] = piece.nbytes

@@ -2,11 +2,24 @@
 
 Each partitioner is a callable ``(record: bytes, n: int) -> int`` (the
 bytes reference path, unchanged engine protocol) and additionally exposes
-``bucket_ids(batch, n)`` which computes the same assignment for a whole
-``RecordBatch`` in one shot via the Pallas ``bucket_partition`` kernel
-(ids + histogram).  The kernel's rule is ``bucket = #{i : bounds[i] <
-key}``; both partitioners phrase their bytes-side decision with exactly
-that rule so the two paths agree record-for-record:
+
+* ``kernel_inputs(batch, n)`` — the (keys, bounds) uint32 rows the Pallas
+  kernels compare, or ``None`` when the batch must take the host loop;
+* ``bucket_ids(batch, n)`` — ids + histogram via ``bucket_partition``
+  (the analysis path: ids come back to the caller);
+* :func:`scatter_batch` — the engine shuffle path: the ``bucket_scatter``
+  kernel lands records bucket-contiguously ON DEVICE (stable counting
+  scatter), and the only host sync is the final [n] histogram that
+  slices the contiguous result into per-bucket batches (the same counts
+  the planner's movement pricing needs).  Batches are padded to a
+  power-of-two row count and ``n_valid`` is dynamic, so one kernel trace
+  serves every batch size at a given padded shape — this is what keeps
+  engine-level throughput at kernel speed instead of re-tracing per
+  per-worker batch size.
+
+The kernel's rule is ``bucket = #{i : bounds[i] < key}``; both
+partitioners phrase their bytes-side decision with exactly that rule so
+the two paths agree record-for-record:
 
 * ``HashPartitioner`` hashes the key prefix with FNV-1a 32-bit (scalar
   and vectorised twins in :mod:`repro.core.records`) and buckets the
@@ -22,6 +35,7 @@ that rule so the two paths agree record-for-record:
 from __future__ import annotations
 
 from bisect import bisect_left
+from functools import partial
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -31,7 +45,7 @@ import jax.numpy as jnp
 
 from repro.core.records import (RecordBatch, fnv1a32, scatter_by_ids,
                                 uniform_hash_bounds)
-from repro.kernels.bucket_partition import bucket_partition
+from repro.kernels.bucket_partition import bucket_partition, bucket_scatter
 
 
 def _kernel_partition(keys: jax.Array, bounds_u32: np.ndarray, n: int,
@@ -78,11 +92,23 @@ class HashPartitioner:
         h = fnv1a32(record[:self.key_bytes])
         return bisect_left(self._bounds_for(n), h)
 
+    def kernel_inputs(self, batch: RecordBatch, n: int
+                      ) -> Tuple[jax.Array, np.ndarray]:
+        """(keys, bounds) uint32 rows for the Pallas kernels."""
+        return batch.hash_keys_u32(self.key_bytes), uniform_hash_bounds(n)
+
+    def scatter_spec(self, batch: RecordBatch, n: int):
+        """(static key spec, bounds) for the jitted device scatter, or
+        None when every record belongs in bucket 0."""
+        if n <= 1:
+            return None
+        return ("hash", self.key_bytes), uniform_hash_bounds(n)
+
     def bucket_ids(self, batch: RecordBatch, n: int, *,
                    block_n: int = 1 << 20, interpret: bool | None = None
                    ) -> Tuple[jax.Array, jax.Array]:
-        keys = batch.hash_keys_u32(self.key_bytes)
-        return _kernel_partition(keys, uniform_hash_bounds(n), n,
+        keys, bounds = self.kernel_inputs(batch, n)
+        return _kernel_partition(keys, bounds, n,
                                  block_n=block_n, interpret=interpret)
 
 
@@ -118,26 +144,46 @@ class RangePartitioner:
             rows.append(row)
         return np.array(rows, dtype=np.uint32)
 
-    def bucket_ids(self, batch: RecordBatch, n: int, *,
-                   block_n: int = 1 << 20, interpret: bool | None = None
-                   ) -> Tuple[jax.Array, jax.Array]:
-        # Multi-word lexicographic compare: boundary bytes and key
-        # prefixes become rows of big-endian uint32 words, so boundaries
-        # of any length stay on the kernel path.  A record's comparison
-        # key is its first len(bnd[0]) bytes (clipped to the record), so
-        # when any boundary length differs from that key length the
-        # zero-padded words can tie where the byte strings differ — a
-        # trailing length word reproduces bytes ordering exactly.
+    def kernel_inputs(self, batch: RecordBatch, n: int
+                      ) -> Tuple[jax.Array, np.ndarray]:
+        """(keys, bounds) uint32 rows for the Pallas kernels.
+
+        Multi-word lexicographic compare: boundary bytes and key
+        prefixes become rows of big-endian uint32 words, so boundaries
+        of any length stay on the kernel path.  A record's comparison
+        key is its first len(bnd[0]) bytes (clipped to the record), so
+        when any boundary length differs from that key length the
+        zero-padded words can tie where the byte strings differ — a
+        trailing length word reproduces bytes ordering exactly.
+        """
         if not self.bnd:
-            return _kernel_partition(batch.keys_u32(4), np.empty(0), n,
-                                     block_n=block_n, interpret=interpret)
+            return batch.keys_u32(4), np.empty(0)
         key_len = min(len(self.bnd[0]), batch.record_size)
         width = max(key_len, max(len(b) for b in self.bnd))
         n_words = max(1, -(-width // 4))
         need_len = any(len(b) != key_len for b in self.bnd)
         keys = batch.key_words(key_len, n_words=n_words,
                                length_word=key_len if need_len else None)
-        bounds = self.bounds_words(n_words, lengths=need_len)
+        return keys, self.bounds_words(n_words, lengths=need_len)
+
+    def scatter_spec(self, batch: RecordBatch, n: int):
+        """(static key spec, bounds) for the jitted device scatter —
+        same word-row construction as :meth:`kernel_inputs`, but the key
+        extraction itself runs *inside* the jitted scatter so the whole
+        shuffle of a padded batch is one compiled call."""
+        if not self.bnd or n <= 1:
+            return None
+        key_len = min(len(self.bnd[0]), batch.record_size)
+        width = max(key_len, max(len(b) for b in self.bnd))
+        n_words = max(1, -(-width // 4))
+        need_len = any(len(b) != key_len for b in self.bnd)
+        return (("range", key_len, n_words, key_len if need_len else None),
+                self.bounds_words(n_words, lengths=need_len))
+
+    def bucket_ids(self, batch: RecordBatch, n: int, *,
+                   block_n: int = 1 << 20, interpret: bool | None = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+        keys, bounds = self.kernel_inputs(batch, n)
         return _kernel_partition(keys, bounds, n,
                                  block_n=block_n, interpret=interpret)
 
@@ -202,10 +248,100 @@ def partition_batch(batch: RecordBatch, partitioner, n: int, *,
 def shuffle_batch(batch: RecordBatch, partitioner, n: int, *,
                   block_n: int = 1 << 20, interpret: bool | None = None
                   ) -> List[RecordBatch]:
-    """Partition + scatter: one kernel call, one argsort, n gathers."""
+    """Partition + host-driven scatter: one kernel call, one host
+    argsort, n gathers.  The engine uses :func:`scatter_batch` (fully
+    device-resident) instead; this path remains for custom callable
+    partitioners and as the ids-visible reference."""
     ids, hist = partition_batch(batch, partitioner, n, block_n=block_n,
                                 interpret=interpret)
     return scatter_by_ids(batch, ids, hist)
+
+
+def _pow2_rows(n: int, floor: int) -> int:
+    """Smallest padded row count >= n from the {2^k, 1.5 * 2^k} ladder,
+    floored at ``floor`` — the fixed shapes batches pad to so kernel
+    traces are shared across batch sizes.  The half-octave step caps
+    padding waste at ~33% (a pure power-of-two ladder can waste ~100%)
+    while keeping the number of distinct traced shapes per octave at 2."""
+    target = max(floor, 2)
+    while target < n:
+        if target + target // 2 >= n:
+            return target + target // 2
+        target *= 2
+    return target
+
+
+def _single_bucket_pieces(batch: RecordBatch, n: int) -> List[RecordBatch]:
+    return [batch] + [RecordBatch.empty(batch.record_size)
+                      for _ in range(max(n, 1) - 1)]
+
+
+@partial(jax.jit,
+         static_argnames=("n_buckets", "key_spec", "block_n", "interpret"))
+def _scatter_padded(data, bounds, n_valid, *, n_buckets: int, key_spec,
+                    block_n: int | None, interpret: bool):
+    """One compiled call for the whole padded-batch shuffle: key
+    extraction (``key_spec`` is static — ``("hash", key_bytes)`` or
+    ``("range", key_len, n_words, length_word)``), the bucket_scatter
+    kernel, and its scan/scatter epilogue.  Re-traces only per
+    (padded shape, key spec, n_buckets) — never per record count,
+    because ``n_valid`` is dynamic."""
+    batch = RecordBatch(data)
+    if key_spec[0] == "hash":
+        keys = batch.hash_keys_u32(key_spec[1])
+    else:
+        _, key_len, n_words, length_word = key_spec
+        keys = batch.key_words(key_len, n_words=n_words,
+                               length_word=length_word)
+    return bucket_scatter(data, keys, bounds, n_valid, n_buckets=n_buckets,
+                          block_n=block_n, interpret=interpret)
+
+
+def scatter_batch(batch: RecordBatch, partitioner, n: int, *,
+                  pad_block: int = 4096, block_n: int | None = None,
+                  interpret: bool | None = None) -> List[RecordBatch]:
+    """Device-resident shuffle: batch in, n bucket-sliced batches out.
+
+    The fast path pads the batch to a power-of-two row count (floored at
+    ``pad_block``) and runs ONE jitted call — key extraction,
+    ``bucket_scatter`` kernel and scan/scatter epilogue — with the real
+    row count as a *dynamic* argument: records land bucket-contiguously
+    on device without the bucket ids ever reaching the host, and one
+    trace serves every batch size at a given padded shape.  The ONE host
+    sync is the final [n] histogram, which both slices the contiguous
+    result into per-bucket batches and gives the planner its per-bucket
+    movement sizes.
+
+    Within a bucket records keep input order (the kernel's stability
+    guarantee), matching the bytes backend's append order exactly.
+    Degenerate shapes (empty batch, single bucket, no boundaries) take a
+    zero-kernel shortcut; partitioners without ``scatter_spec``
+    (arbitrary ``(record, n) -> int`` callables) fall back to the
+    host-loop + host-argsort path so correctness never depends on the
+    kernel being expressible.
+    """
+    nrec = batch.num_records
+    if n <= 1:
+        return [batch]
+    if nrec == 0:
+        return [batch.take(jnp.zeros((0,), jnp.int32)) for _ in range(n)]
+    if isinstance(partitioner, ReducePartitioner):
+        return _single_bucket_pieces(batch, n)
+    if not hasattr(partitioner, "scatter_spec"):
+        ids, hist = _host_partition(batch, partitioner, n)
+        return scatter_by_ids(batch, ids, hist)
+    spec = partitioner.scatter_spec(batch, n)
+    if spec is None:
+        return _single_bucket_pieces(batch, n)
+    key_spec, bounds = spec
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    padded = batch.pad_to(_pow2_rows(nrec, min(pad_block, 1 << 20)))
+    out, hist = _scatter_padded(padded.data, jnp.asarray(bounds), nrec,
+                                n_buckets=n, key_spec=key_spec,
+                                block_n=block_n, interpret=interpret)
+    offsets = np.concatenate([[0], np.cumsum(np.asarray(hist))])  # host sync
+    return [RecordBatch(out[offsets[i]:offsets[i + 1]]) for i in range(n)]
 
 
 def terasort_stages(bounds: Sequence[bytes], backend: str, n_buckets: int,

@@ -1,14 +1,44 @@
-"""Bucket partition kernel — the TeraSort range-partitioner hot loop.
+"""Bucket partition + device scatter kernels — the TeraSort shuffle hot loop.
 
-Given sorted boundaries (the sampled splitters), computes each key's bucket
-id and a per-bucket histogram. Keys and boundaries are rows of k big-endian
-uint32 words compared lexicographically — k = 1 is the classic single-word
-case, 10-byte TeraSort keys use k = 3 — so arbitrary-length byte prefixes
-partition on the kernel path. Bucket id = #boundaries < key, computed as a
-word-by-word vectorised comparison against the boundary table pinned in
-VMEM (k is static, the word loop unrolls at trace time); the histogram
-accumulates in the output ref across the sequentially-executed grid (TPU
-grid semantics), so no host-side reduction is needed.
+Two Pallas entry points share one comparison contract:
+
+* :func:`bucket_partition_call` — bucket ids + per-bucket histogram (the
+  original analysis pass; ids are returned to the caller).
+* :func:`bucket_scatter_call` — the device-resident shuffle: ids, per-block
+  histograms and intra-block stable ranks in one kernel pass, then a pure
+  device epilogue (exclusive scans + one scatter) that lands the records in
+  bucket-contiguous order.  Bucket ids never reach the host; the only value
+  a caller needs to sync is the final [n_buckets] histogram.
+
+**Comparison contract (both kernels).**  Keys and boundaries are rows of
+``k`` big-endian uint32 words compared lexicographically — ``k = 1`` is the
+classic single-word case, 10-byte TeraSort keys use ``k = 3``.  ``k`` is
+static, so the word loop unrolls at trace time into ``k`` vectorised
+compares against the boundary table pinned in VMEM.  When boundary byte
+lengths vary, callers append a trailing *length word* to both keys and
+boundaries (see ``RecordBatch.key_words``): zero-padded words can tie where
+the byte strings differ, and the length word reproduces Python's
+shorter-prefix-sorts-first ``bytes`` ordering exactly.  The bucket rule is
+strict: ``id = #{j : bounds[j] < key}``, clamped to ``n_out - 1`` when the
+boundary table implies more buckets than the caller wants (mirroring the
+bytes reference's ``min(lo, n - 1)``).
+
+**Stability guarantee (scatter).**  Grid blocks execute in input order and
+the intra-block rank is a prefix count over the block's rows, so two
+records in the same bucket keep their input order in the scattered output
+— exactly the bytes backend's append order.  Rows at positions >=
+``n_valid`` (shape padding) are routed to a trash bucket *after* every
+real bucket, so the first ``sum(hist)`` output rows are the real records.
+
+**Block shapes / VMEM.**  A grid step holds ``[bn, k]`` uint32 keys, the
+``[n_bounds, k]`` boundary table, the boolean compare state ``[bn,
+n_bounds]``, and (scatter only) the one-hot running count ``[bn, n_out +
+1]`` int32 — roughly ``bn * (4k + n_bounds + 4 * n_out)`` bytes live at
+once.  On a real accelerator keep that under VMEM (~16 MB/core): ``bn =
+2048`` with 3-word keys and <= 64 buckets uses well under 1 MB.  In
+interpret mode (CPU CI) every grid step pays a Python interpreter pass, so
+callers use ONE block (``bn = n``) — that is what the ``ops.py`` wrappers
+default to per backend.
 """
 from __future__ import annotations
 
@@ -19,27 +49,40 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _compare_ids(keys, bounds):
+    """Strict lexicographic bucket ids: ``#{j : bounds[j] < keys[r]}``.
+
+    ``keys [bn, k]`` vs ``bounds [n_bounds, k]`` word rows; scans words
+    while prefixes tie (the loop is over static k, so it unrolls).
+    """
+    bn, k = keys.shape
+    n_bounds = bounds.shape[0]
+    lt = jnp.zeros((bn, n_bounds), jnp.bool_)
+    eq = jnp.ones((bn, n_bounds), jnp.bool_)
+    for w in range(k):
+        kw = keys[:, w][:, None]                # [bn, 1]
+        bw = bounds[:, w][None, :]              # [1, n_bounds]
+        lt = lt | (eq & (bw < kw))
+        eq = eq & (bw == kw)
+    return jnp.sum(lt.astype(jnp.int32), axis=1)  # [bn]
+
+
 def _kernel(keys_ref, bounds_ref, ids_ref, hist_ref, *, n_buckets: int,
             n_valid: int, bn: int):
+    """Analysis pass: ids + one accumulated histogram.
+
+    The histogram accumulates in the output ref across the sequentially-
+    executed grid (TPU grid semantics), so no host-side reduction is
+    needed.  Padded tail keys (positions >= n_valid) land in bucket 0
+    with zero histogram weight.
+    """
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
         hist_ref[...] = jnp.zeros_like(hist_ref)
 
-    keys = keys_ref[...]                        # [bn, k] uint32
-    bounds = bounds_ref[...]                    # [n_buckets-1, k]
-    k = keys.shape[1]
-    # lexicographic bounds[j] < keys[r]: scan words while prefixes tie
-    lt = jnp.zeros((bn, n_buckets - 1), jnp.bool_)
-    eq = jnp.ones((bn, n_buckets - 1), jnp.bool_)
-    for w in range(k):
-        kw = keys[:, w][:, None]                # [bn, 1]
-        bw = bounds[:, w][None, :]              # [1, n_buckets-1]
-        lt = lt | (eq & (bw < kw))
-        eq = eq & (bw == kw)
-    ids = jnp.sum(lt.astype(jnp.int32), axis=1)  # [bn]
-    # mask padded tail keys into bucket 0 with zero histogram weight
+    ids = _compare_ids(keys_ref[...], bounds_ref[...])
     pos = i * bn + jax.lax.iota(jnp.int32, bn)
     valid = pos < n_valid
     ids = jnp.where(valid, ids, 0)
@@ -90,3 +133,112 @@ def bucket_partition_call(keys: jax.Array, bounds: jax.Array, *,
         interpret=interpret,
     )(keys, bounds)
     return ids[:N], hist
+
+
+def _scatter_kernel(nvalid_ref, keys_ref, bounds_ref, ids_ref, rank_ref,
+                    bhist_ref, *, n_out: int, bn: int):
+    """Scatter pass: per-block ids, intra-block stable ranks, block hists.
+
+    Unlike :func:`_kernel`, ``n_valid`` arrives as a *dynamic* scalar
+    input, so one trace serves every record count at a fixed padded
+    shape — the property that keeps the engine path compile-once.
+    Padded rows (position >= n_valid) get id ``n_out`` (the trash bucket
+    ordered after every real bucket); real ids are clamped to
+    ``n_out - 1`` when the boundary table implies more buckets.
+
+    The intra-block rank is a same-bucket prefix count: with ``csum`` the
+    inclusive running one-hot count, ``rank[r] = csum[r, ids[r]] - 1``
+    (computed as an elementwise masked sum — no gather inside the
+    kernel).  ``bhist_ref`` gets this block's [1, n_out + 1] bucket
+    counts; the epilogue turns block hists into global offsets.
+    """
+    i = pl.program_id(0)
+    raw = _compare_ids(keys_ref[...], bounds_ref[...])
+    ids = jnp.minimum(raw, n_out - 1)
+    pos = i * bn + jax.lax.iota(jnp.int32, bn)
+    ids = jnp.where(pos < nvalid_ref[0], ids, n_out)
+    onehot = (ids[:, None]
+              == jax.lax.iota(jnp.int32, n_out + 1)[None, :]).astype(jnp.int32)
+    csum = jnp.cumsum(onehot, axis=0)           # inclusive running count
+    ids_ref[...] = ids
+    rank_ref[...] = jnp.sum(onehot * (csum - 1), axis=1)
+    bhist_ref[...] = csum[-1:, :]
+
+
+def bucket_scatter_call(data: jax.Array, keys: jax.Array, bounds: jax.Array,
+                        n_valid, *, n_out: int, block_n: int = 2048,
+                        interpret: bool = False):
+    """Device-resident bucketed scatter (stable counting scatter).
+
+    ``data``: [N, width] uint8 records; ``keys``: [N] or [N, k] uint32 key
+    rows for the same records; ``bounds``: [n_bounds] or [n_bounds, k]
+    sorted boundary rows; ``n_valid``: how many leading rows are real
+    (the rest are shape padding and scatter to the tail).
+
+    Returns ``(out [N, width] uint8, hist [n_out] int32)`` where
+    ``out[:hist.sum()]`` holds the real records in bucket-contiguous,
+    input-stable order — bucket ``b`` occupies rows
+    ``[sum(hist[:b]), sum(hist[:b+1]))``.  Everything stays on device;
+    the caller decides when (if ever) to sync ``hist``.
+
+    The destination index of record ``r`` in block ``i`` with bucket
+    ``b`` is ``bucket_start[b] + count of b in blocks < i +
+    intra-block rank`` — the classic three-level exclusive-scan scatter,
+    with the two outer scans (over buckets and over blocks) done by the
+    XLA epilogue on the kernel's per-block histograms.
+    """
+    if keys.ndim == 1:
+        keys = keys[:, None]
+    if bounds.ndim == 1:
+        bounds = bounds[:, None]
+    if keys.shape[1] != bounds.shape[1]:
+        raise ValueError(f"keys have {keys.shape[1]} words per row but "
+                         f"bounds have {bounds.shape[1]}")
+    if data.shape[0] != keys.shape[0]:
+        raise ValueError(f"data has {data.shape[0]} rows but keys have "
+                         f"{keys.shape[0]}")
+    N, k = keys.shape
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:  # rows past n_valid are trash-bucketed, so padding is benign
+        keys = jnp.pad(keys, ((0, pad), (0, 0)))
+        data = jnp.pad(data, ((0, pad), (0, 0)))
+    Np = keys.shape[0]
+    nb = Np // bn
+    nv = jnp.asarray(n_valid, jnp.int32).reshape((1,))
+
+    kern = functools.partial(_scatter_kernel, n_out=n_out, bn=bn)
+    ids, rank, bhist = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bounds.shape[0], k), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1, n_out + 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np,), jnp.int32),
+            jax.ShapeDtypeStruct((Np,), jnp.int32),
+            jax.ShapeDtypeStruct((nb, n_out + 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(nv, keys, bounds)
+
+    # device epilogue: two exclusive scans -> destination index -> move.
+    # The move inverts the destination permutation with a cheap [Np]
+    # int32 scatter, then gathers the wide uint8 rows: XLA lowers the
+    # row gather several times faster than the equivalent row scatter.
+    total = jnp.sum(bhist, axis=0)              # [n_out + 1]
+    starts = jnp.cumsum(total) - total          # exclusive bucket starts
+    blk_excl = jnp.cumsum(bhist, axis=0) - bhist  # [nb, n_out + 1]
+    block_of = jax.lax.iota(jnp.int32, Np) // bn
+    dest = starts[ids] + blk_excl[block_of, ids] + rank
+    perm = jnp.zeros((Np,), jnp.int32).at[dest].set(
+        jax.lax.iota(jnp.int32, Np), unique_indices=True)
+    out = jnp.take(data, perm, axis=0)
+    return out[:N], total[:n_out]

@@ -1,9 +1,11 @@
-"""Oracle for the bucket partitioner.
+"""Oracles for the bucket partitioner and the device scatter.
 
-Independent of the kernel's word-by-word compare: each k-word row is
-folded into one arbitrary-precision Python int (big-endian word order),
-then bucket id = #{bounds < key} via bisect — the same strict rule the
-bytes-path partitioners implement.
+Deliberately independent of the kernels' word-by-word compare: each
+k-word row is folded into one arbitrary-precision Python int (big-endian
+word order), then bucket id = #{bounds < key} via bisect — the same
+strict rule the bytes-path partitioners implement.  The scatter oracle
+adds numpy's stable argsort over those ids, which is the definition of
+the kernel's stability guarantee (same-bucket records keep input order).
 """
 from __future__ import annotations
 
@@ -23,8 +25,27 @@ def _row_ints(a: np.ndarray) -> list:
 
 
 def bucket_partition_ref(keys, bounds, n_buckets: int):
+    """(ids, hist) — the oracle for :func:`bucket_partition`."""
     bi = _row_ints(np.asarray(bounds))
     ids = np.array([bisect_left(bi, v) for v in _row_ints(np.asarray(keys))],
                    dtype=np.int32)
     hist = np.bincount(ids, minlength=n_buckets).astype(np.int32)
     return jnp.asarray(ids), jnp.asarray(hist)
+
+
+def bucket_scatter_ref(data, keys, bounds, n_buckets: int):
+    """(out, hist) — the oracle for :func:`bucket_scatter`.
+
+    ``data [N, width]`` records reordered bucket-contiguously by a
+    *stable* argsort of the oracle bucket ids (clamped to ``n_buckets -
+    1`` like the kernel / the bytes reference's ``min(lo, n - 1)``).
+    No shape padding here: callers compare against ``out[:N]`` of the
+    kernel result with ``n_valid = N``.
+    """
+    data = np.asarray(data)
+    bi = _row_ints(np.asarray(bounds))
+    ids = np.array([min(bisect_left(bi, v), n_buckets - 1)
+                    for v in _row_ints(np.asarray(keys))], dtype=np.int32)
+    order = np.argsort(ids, kind="stable")
+    hist = np.bincount(ids, minlength=n_buckets).astype(np.int32)
+    return jnp.asarray(data[order]), jnp.asarray(hist)

@@ -11,6 +11,19 @@ import pytest
 # subprocesses (tests/test_spmd_subprocess.py) and by the dry-run driver.
 
 
+def pytest_collection_modifyitems(config, items):
+    # requires_accelerator: compiled (non-interpret) Pallas paths need a
+    # real TPU/GPU backend; on the CPU CI they auto-skip instead of
+    # failing inside the Mosaic/Triton lowering
+    if jax.default_backend() in ("tpu", "gpu"):
+        return
+    skip = pytest.mark.skip(reason="needs a TPU/GPU backend "
+                                   f"(have {jax.default_backend()})")
+    for item in items:
+        if "requires_accelerator" in item.keywords:
+            item.add_marker(skip)
+
+
 @pytest.fixture
 def rng():
     return jax.random.PRNGKey(0)
