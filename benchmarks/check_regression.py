@@ -30,6 +30,12 @@ WATCHED = [
      ("result", "host", "sphere_array", "partition_rec_per_s"), "abs"),
     ("BENCH_table3_terasort.json",
      ("result", "host", "speedup"), "ratio"),
+    # dispatch-then-sync overlap: shuffle rounds per host sync on the
+    # array engine path.  Healthy = 1.0 (one barrier per round); a
+    # regression to per-worker-batch syncing drags it toward 1/workers
+    # (~0.17 on the 6-site cloud), far past any tolerance
+    ("BENCH_table3_terasort.json",
+     ("result", "host", "sphere_array", "rounds_per_sync"), "ratio"),
     # engine-level scale sweep, flagship (largest) scale: the warm
     # device-resident scatter through the whole engine must stay ahead
     # of the bytes backend (ratio) and keep its absolute throughput

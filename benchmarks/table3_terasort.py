@@ -105,20 +105,40 @@ def _sample_bounds(data: bytes, n_buckets: int = 6):
 
 
 def _engine_run(engine_cls, backend: str, data: bytes, bounds,
-                n_records: int, *, warm_runs: int = 0):
+                n_records: int, *, warm_runs: int = 0, best_of: int = 1):
     """Upload + run one TeraSort config; returns (sorted records, report).
 
     ``warm_runs`` extra identical runs execute first and are discarded —
     the array backend's steady-state number (the engine's real serving
     regime: sessions/streams re-run jobs against compiled kernels), with
     the one-off Pallas trace per padded block shape excluded, exactly
-    like the partition microbench warms its jit before timing."""
+    like the partition microbench warms its jit before timing.
+    ``best_of`` measured runs then execute and the report with the
+    smallest ``partition_seconds`` wins — the partition microbench's
+    min-of-N policy applied at engine level, so a single scheduler
+    stall on a one-core host doesn't masquerade as a shuffle
+    regression.
+
+    ``timing_sync=True`` keeps the engine's ``partition_seconds`` honest
+    under the dispatch-then-sync shuffle: the clock only stops after
+    every shuffled piece is device-complete (see docs/BENCHMARKS.md,
+    "timing policy")."""
     master, client = _make_cloud()
     client.upload("tera", data, replication=3)
-    eng = engine_cls(master, client)
+    eng = engine_cls(master, client, timing_sync=True)
+    # ONE job object reused across warm + measured runs: stage UDF jit
+    # caches key on the callable's identity, so rebuilding the job per
+    # run (fresh lambdas) would retrace every stage and the warm runs
+    # would never actually warm anything.
+    job = _terasort_job(bounds, backend)
     for _ in range(warm_runs):
-        eng.run(_terasort_job(bounds, backend))
-    outputs, rep = eng.run(_terasort_job(bounds, backend))
+        eng.run(job)
+    best = None
+    for _ in range(max(best_of, 1)):
+        outputs, rep = eng.run(job)
+        if best is None or rep.partition_seconds < best[1].partition_seconds:
+            best = (outputs, rep)
+    outputs, rep = best
     return _check_sorted(outputs, n_records), rep
 
 
@@ -156,6 +176,15 @@ def run_host_level(n_records: int = 50_000) -> dict:
             # array backend: distinct traced shapes per pad-stable stage
             # UDF (1 per stage = the jit-once guarantee held)
             "udf_traces": dict(rep.udf_traces),
+            # dispatch-then-sync accounting: the array backend harvests
+            # one shuffle round behind ONE host barrier, so
+            # rounds_per_sync sits at 1.0 (a per-worker-sync regression
+            # drags it toward 1/workers); bytes never syncs a device.
+            "shuffle_rounds": rep.shuffle_rounds,
+            "host_syncs": rep.host_syncs,
+            "rounds_per_sync": round(rep.shuffle_rounds
+                                     / rep.host_syncs, 3)
+                               if rep.host_syncs else None,
         }
     out["speedup"] = round(out["hadoop_style"]["sim_seconds"]
                            / out["sphere"]["sim_seconds"], 2)
@@ -168,10 +197,11 @@ def run_engine_scales(scales) -> list:
     This is the metric the device-resident scatter exists for: the whole
     engine shuffle — per-worker RecordBatch in, bucket-sliced
     RecordBatches out — not the standalone kernel.  The array number is
-    steady-state (one warm run first, see :func:`_engine_run`); the cold
-    first run is also reported so the one-off trace cost stays visible.
-    ``array_over_bytes`` should be >= 1 at every scale — the flagship-
-    scale engine throughput is what ``check_regression.py`` gates.
+    steady-state (one warm run first, then best-of-5 measured runs, see
+    :func:`_engine_run`); the cold first run is also reported so the
+    one-off trace cost stays visible.  ``array_over_bytes`` should be
+    >= 1 at every scale — the flagship-scale engine throughput is what
+    ``check_regression.py`` gates.
     """
     rows = []
     for n in scales:
@@ -181,7 +211,7 @@ def run_engine_scales(scales) -> list:
         rec_cold, rep_cold = _engine_run(SphereEngine, "array", data,
                                          bounds, n)
         rec_a, rep_a = _engine_run(SphereEngine, "array", data, bounds, n,
-                                   warm_runs=1)
+                                   warm_runs=1, best_of=5)
         assert rec_a == rec_b == rec_cold, "backends disagree"
         rows.append({
             "records": n,
@@ -313,7 +343,7 @@ def main(smoke: bool = False) -> dict:
         print(f"host_scales:{row['records']},array_rec_per_s,"
               f"{row['array_rec_per_s']} ({row['array_over_bytes']}x bytes)")
     part = run_partition_bench(100_000 if smoke else 1_000_000,
-                               repeats=2 if smoke else 3)
+                               repeats=2 if smoke else 5)
     for k, v in part.items():
         print(f"partition,{k},{v}")
     dev = run_device_level(1 << 14 if smoke else 1 << 18)

@@ -68,13 +68,22 @@ class SphereEngine:
     def __init__(self, master: SectorMaster, client: SectorClient,
                  speeds: Optional[Dict[str, float]] = None,
                  speculate_factor: float = 1.8, max_retries: int = 3,
-                 pad_block: int = 4096):
+                 pad_block: int = 4096, prefetch: bool = True,
+                 timing_sync: bool = False):
         self.master = master
         self.client = client
         self.speeds = speeds or {}
         self.speculate_factor = speculate_factor
         self.max_retries = max_retries
         self.pad_block = pad_block
+        # prefetch: overlap stage-0 chunk fetch+decode of task i+1 with
+        # the dispatch of task i (one-deep, result-identical — off only
+        # for A/B tests and debugging).  timing_sync: block on shuffled
+        # pieces before stopping the partition_seconds clock — the
+        # benchmark-honesty knob; leave off in production, where eager
+        # timers would serialise the async data plane they measure.
+        self.prefetch = prefetch
+        self.timing_sync = timing_sync
 
     # ------------------------------------------------------------- helpers
     def _workers(self) -> List[str]:

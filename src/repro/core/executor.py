@@ -25,8 +25,9 @@ workers and simulated time agrees across backends for the same job.
 """
 from __future__ import annotations
 
+import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +35,7 @@ import jax.numpy as jnp
 from repro.core.job import SphereJob, SphereStage
 from repro.core.planner import SphereReport, StagePlan
 from repro.core.records import RecordBatch
-from repro.core.shuffle import scatter_batch
+from repro.core.shuffle import _quarter_rows, scatter_pieces_dispatch
 from repro.sector.server import ServerDown
 
 # per-bucket origin accounting: origins[i][worker] = bytes of bucket i
@@ -44,10 +45,11 @@ Origins = List[Dict[str, int]]
 
 class _ExecutorBase:
     def __init__(self, client, workers: Sequence[str], max_retries: int = 3,
-                 cache_chunks: bool = False):
+                 cache_chunks: bool = False, prefetch: bool = True):
         self.client = client
         self.workers = list(workers)
         self.max_retries = max_retries
+        self.prefetch = prefetch
         # session mode: stage-0 chunks, once fetched and decoded, stay
         # resident (bytes: record lists; array: device RecordBatches) so
         # a chain of jobs over the same file pays the host round-trip
@@ -92,6 +94,71 @@ class _ExecutorBase:
             self._chunk_cache[key] = decoded
         return decoded
 
+    # ------------------------------------------------- stage-0 prefetch
+    def _prefetch_start(self, job: SphereJob, key: str):
+        """Kick off fetch+decode of one chunk on a worker thread (None on
+        a chunk-cache hit).  The thread makes ONE bare ``read_chunk``
+        attempt — retry accounting and repair stay on the main thread so
+        reports are bit-identical with prefetching off."""
+        if self._chunk_cache is not None and key in self._chunk_cache:
+            return None
+        box: Dict[str, object] = {}
+
+        def work():
+            try:
+                box["decoded"] = self._decode_chunk(
+                    job, self.client.read_chunk(key))
+            except BaseException as err:  # noqa: BLE001 — re-raised below
+                box["error"] = err
+
+        t = threading.Thread(target=work, daemon=True,
+                             name=f"sphere-prefetch-{key}")
+        t.start()
+        return t, box
+
+    def _prefetch_finish(self, job: SphereJob, key: str, handle,
+                         rep: SphereReport):
+        """Join a prefetch.  A failed read replays the chunk through the
+        main-thread retry loop (:meth:`_stage0_input`) from attempt one,
+        so ``rep.retried`` and repair behaviour match the synchronous
+        path exactly; unexpected errors propagate."""
+        if handle is None:  # cache hit at start time
+            return self._stage0_input(job, key, rep)
+        thread, box = handle
+        thread.join()
+        if "error" in box:
+            if isinstance(box["error"], (IOError, ServerDown)):
+                return self._stage0_input(job, key, rep)
+            raise box["error"]
+        decoded = box["decoded"]
+        if self._chunk_cache is not None:
+            self._chunk_cache[key] = decoded
+        return decoded
+
+    def _stage0_batches(self, job: SphereJob, tasks, rep: SphereReport
+                        ) -> Iterator[tuple]:
+        """Yield ``(task, decoded_input)`` for the stage-0 task list with
+        a one-deep decode prefetch: while the caller runs (dispatches)
+        task i, a worker thread fetches and decodes chunk i+1, so host
+        I/O overlaps device compute.  Reads stay strictly sequential —
+        the next fetch starts only after the previous one finished — so
+        Sector client state (transfer log, cache warmth) evolves exactly
+        as in the synchronous loop.  ``decoded_input`` is None when every
+        replica of a chunk is gone (the caller skips the task)."""
+        if not self.prefetch:
+            for t in tasks:
+                yield t, self._stage0_input(job, t.key, rep)
+            return
+        pending = None
+        for i, t in enumerate(tasks):
+            if pending is None:
+                cur = self._stage0_input(job, t.key, rep)
+            else:
+                cur = self._prefetch_finish(job, t.key, pending, rep)
+            pending = (self._prefetch_start(job, tasks[i + 1].key)
+                       if i + 1 < len(tasks) else None)
+            yield t, cur
+
 
 class BytesExecutor(_ExecutorBase):
     """Reference data plane: partitions are lists of Python bytes."""
@@ -109,27 +176,28 @@ class BytesExecutor(_ExecutorBase):
                   parts, rep: SphereReport, *, first_stage: bool
                   ) -> Dict[str, List[bytes]]:
         out: Dict[str, List[bytes]] = {w: [] for w in self.workers}
-        for t in plan.tasks:
-            if first_stage:
-                records = self._stage0_input(job, t.key, rep)
-                if records is None:
-                    continue
-                if self._chunk_cache is not None:
-                    # hand UDFs a copy: an in-place-mutating UDF (sort,
-                    # pop) must not corrupt the cache for later jobs
-                    records = list(records)
-            else:
-                records = parts.get(t.key)
-                if not records:
-                    continue
+        if first_stage:
+            source = self._stage0_batches(job, plan.tasks, rep)
+        else:
+            source = ((t, parts.get(t.key)) for t in plan.tasks)
+        for t, records in source:
+            if not records:
+                continue
+            if first_stage and self._chunk_cache is not None:
+                # hand UDFs a copy: an in-place-mutating UDF (sort,
+                # pop) must not corrupt the cache for later jobs
+                records = list(records)
             out[t.executor].extend(stage.apply_bytes(records))
         return out
 
     def bucketize(self, stage: SphereStage, out, n: int, rep: SphereReport
                   ) -> Tuple[List[List[bytes]], Origins]:
-        """Reference shuffle: one partitioner call per Python record."""
+        """Reference shuffle: one partitioner call per Python record.
+        Pure host work — a bytes shuffle round never syncs a device
+        (``rep.host_syncs`` stays 0)."""
         buckets: List[List[bytes]] = [[] for _ in range(n)]
         origins: Origins = [{} for _ in range(n)]
+        rep.shuffle_rounds += 1
         t0 = time.perf_counter()
         for w in self.workers:
             for r in out[w]:
@@ -155,20 +223,31 @@ class BytesExecutor(_ExecutorBase):
 
 
 class _TracedUDF:
-    """jit wrapper around a batch (or mask-aware) UDF that counts trace
-    events — the trace-time side effect fires once per distinct input
-    shape, so ``traces == 1`` certifies the stage compiled exactly once.
+    """jit wrapper around a pad-stable (or mask-aware) UDF that counts
+    trace events — the trace-time side effect fires once per distinct
+    input shape, so ``traces == 1`` certifies the stage compiled exactly
+    once.
 
-    Masked mode jits ``(data, n_valid, params)`` with n_valid and the
-    params pytree as *dynamic* arguments: every task of the stage — and
-    every re-run of the stage across a chained session (e.g. k-means
-    iterations with fresh centroids in ``params``) — shares one trace."""
+    Both modes jit over ``(data, n_valid, ...)`` with ``n_valid``
+    dynamic, and normalise the block's padding tail to the stage's pad
+    byte ON DEVICE before the UDF sees it: the executor hands over raw
+    fixed-shape blocks (:meth:`RecordBatch.block`) whose padding content
+    is junk — there is no host-side slice-then-repad copy per hop, and
+    the one fused ``where`` inside the trace replaces it.
 
-    def __init__(self, name: str, udf, *, masked: bool = False):
+    Masked mode additionally passes the params pytree as a *dynamic*
+    argument: every task of the stage — and every re-run of the stage
+    across a chained session (e.g. k-means iterations with fresh
+    centroids in ``params``) — shares one trace."""
+
+    def __init__(self, name: str, udf, *, masked: bool = False,
+                 pad_value: int = 0):
         self.name = name
         self.udf = udf
+        self.pad_value = pad_value
         self.traces = 0
-        self._jit = jax.jit(self._call_masked if masked else self._call)
+        self._jit = jax.jit(self._call_masked if masked else
+                            self._call_padded)
 
     def _check(self, out) -> jax.Array:
         if not isinstance(out, RecordBatch):
@@ -176,14 +255,24 @@ class _TracedUDF:
                             f"a RecordBatch, got {type(out).__name__}")
         return out.data
 
-    def _call(self, data: jax.Array) -> jax.Array:
+    def _normalize(self, data: jax.Array, n_valid):
+        """(mask, block with padding rows set to the stage pad byte) —
+        junk tails must never reach a UDF: a pad-stable sort keys on the
+        pad byte, and masked reductions may bitcast rows to floats where
+        junk could be NaN (NaN * 0 still poisons a sum)."""
+        mask = jnp.arange(data.shape[0], dtype=jnp.int32) < n_valid
+        return mask, jnp.where(mask[:, None], data,
+                               jnp.asarray(self.pad_value, data.dtype))
+
+    def _call_padded(self, data: jax.Array, n_valid) -> jax.Array:
         self.traces += 1
-        return self._check(self.udf(RecordBatch(data)))
+        _, norm = self._normalize(data, n_valid)
+        return self._check(self.udf(RecordBatch(norm)))
 
     def _call_masked(self, data: jax.Array, n_valid, params) -> jax.Array:
         self.traces += 1
-        mask = jnp.arange(data.shape[0], dtype=jnp.int32) < n_valid
-        return self._check(self.udf(RecordBatch(data), mask, params))
+        mask, norm = self._normalize(data, n_valid)
+        return self._check(self.udf(RecordBatch(norm), mask, params))
 
     def __call__(self, *args) -> jax.Array:
         return self._jit(*args)
@@ -193,10 +282,17 @@ class ArrayExecutor(_ExecutorBase):
     """Device-resident data plane: one RecordBatch per worker partition."""
 
     def __init__(self, client, workers: Sequence[str], max_retries: int = 3,
-                 pad_block: int = 4096, cache_chunks: bool = False):
+                 pad_block: int = 4096, cache_chunks: bool = False,
+                 prefetch: bool = True, timing_sync: bool = False):
         super().__init__(client, workers, max_retries,
-                         cache_chunks=cache_chunks)
+                         cache_chunks=cache_chunks, prefetch=prefetch)
         self.pad_block = pad_block
+        # benchmark honesty knob: block on every shuffled piece before
+        # stopping the partition_seconds clock, so deferred-sync timing
+        # can never report still-in-flight device work as finished.
+        # Off by default — a timing-only barrier, excluded from the
+        # host_syncs data-plane accounting.
+        self.timing_sync = timing_sync
 
     def empty_parts(self) -> Dict[str, Optional[RecordBatch]]:
         return {w: None for w in self.workers}
@@ -211,6 +307,7 @@ class ArrayExecutor(_ExecutorBase):
     # --------------------------------------------------------- UDF apply
     def _traced_for(self, stage: SphereStage, udf, *,
                     masked: bool = False) -> _TracedUDF:
+        pad_value = stage.pad_value or 0
         # the wrapper lives ON the stage object (not in an executor-side
         # id()-keyed dict): same-named stages keep their own traced UDFs,
         # a stage re-run across a whole session chain keeps one compiled
@@ -218,8 +315,10 @@ class ArrayExecutor(_ExecutorBase):
         # a dead stage can never collide with a new stage allocated at
         # the same address, nor does trace state accumulate unboundedly
         traced = getattr(stage, "_traced", None)
-        if traced is None or traced.udf is not udf:
-            traced = _TracedUDF(stage.name, udf, masked=masked)
+        if traced is None or traced.udf is not udf \
+                or traced.pad_value != pad_value:
+            traced = _TracedUDF(stage.name, udf, masked=masked,
+                                pad_value=pad_value)
             stage._traced = traced
         return traced
 
@@ -232,36 +331,47 @@ class ArrayExecutor(_ExecutorBase):
 
     def _apply_masked(self, stage: SphereStage, batch: RecordBatch,
                       target: int, rep: SphereReport) -> RecordBatch:
-        """Mask-aware reduction path: pad to the stage block shape, hand
-        the UDF a validity mask and the stage's current params.  The
-        output is returned whole — reduction outputs have no padding
-        rows to slice off."""
+        """Mask-aware reduction path: hand the UDF the stage's fixed
+        block (padding normalised on device by the traced wrapper), a
+        validity mask, and the stage's current params.  The output is
+        returned whole — reduction outputs have no padding rows to
+        slice off."""
         traced = self._traced_for(stage, stage.masked_udf, masked=True)
-        data = batch.pad_to(target, stage.pad_value or 0).data
-        out = traced(data, batch.num_records, stage.params)
+        out = traced(batch.block(target), batch.num_records, stage.params)
         self._note_traces(stage, traced, rep)
         return RecordBatch(out)
 
     def _apply_padded(self, stage: SphereStage, batch: RecordBatch,
                       target: int, rep: SphereReport) -> RecordBatch:
+        """Pad-stable path: the UDF runs on the stage's fixed block and
+        its output STAYS at block shape — the result is a
+        padding-resident batch (``n_valid``) handed to the next hop
+        as-is, instead of a slice-to-n copy here and a re-pad copy
+        there."""
         traced = self._traced_for(stage, stage.batch_udf)
         n = batch.num_records
-        data = batch.pad_to(target, stage.pad_value).data
-        out = traced(data)
+        out = traced(batch.block(target), n)
         self._note_traces(stage, traced, rep)
         if out.shape[0] != target:
             raise ValueError(
                 f"stage {stage.name!r} declares pad_value but its batch_udf "
                 f"changed the row count ({target} -> {out.shape[0]}); "
                 f"pad-stable UDFs must map padding rows to tail padding")
-        return RecordBatch(out[:n])
+        return RecordBatch(out, n_valid=n)
 
     def _stage_block_shape(self, job: SphereJob, plan: StagePlan, parts,
                            first_stage: bool) -> int:
-        """Fixed block shape for a pad-stable stage: power-of-two ceiling
-        of the stage's largest task, floored at pad_block.  Row counts
-        come from the plan's task sizes / resident partitions, so no
-        batch has to be fetched (or held) to compute it."""
+        """Fixed block shape for a pad-stable stage: the stage's largest
+        task rounded up on the quarter-octave
+        {2^k, 1.25 * 2^k, 1.5 * 2^k, 1.75 * 2^k} ladder, floored at
+        pad_block.  This shape is computed once per stage, so the finer
+        ladder costs no extra traces while capping the junk-tail of
+        resident pieces at ~25% worst case — typically a few percent —
+        junk the segmented scatter would otherwise mask, scan and fetch
+        every round (a pure power-of-two ceiling wastes up to ~100%).
+        Row counts come from the plan's task sizes / resident
+        partitions, so no batch has to be fetched (or held) to compute
+        it."""
         max_rows = 0
         for t in plan.tasks:
             if first_stage:
@@ -272,10 +382,7 @@ class ArrayExecutor(_ExecutorBase):
             max_rows = max(max_rows, rows)
         if not max_rows:
             return 0
-        target = self.pad_block
-        while target < max_rows:
-            target *= 2
-        return target
+        return _quarter_rows(max_rows, self.pad_block)
 
     def run_stage(self, job: SphereJob, stage: SphereStage, plan: StagePlan,
                   parts, rep: SphereReport, *, first_stage: bool
@@ -288,15 +395,13 @@ class ArrayExecutor(_ExecutorBase):
         target = (self._stage_block_shape(job, plan, parts, first_stage)
                   if masked or pad_stable else 0)
         out: Dict[str, List[RecordBatch]] = {w: [] for w in self.workers}
-        for t in plan.tasks:
-            if first_stage:
-                batch = self._stage0_input(job, t.key, rep)
-                if batch is None:
-                    continue
-            else:
-                batch = parts.get(t.key)
-                if batch is None or not batch.num_records:
-                    continue
+        if first_stage:
+            source = self._stage0_batches(job, plan.tasks, rep)
+        else:
+            source = ((t, parts.get(t.key)) for t in plan.tasks)
+        for t, batch in source:
+            if batch is None or not batch.num_records:
+                continue
             if masked:
                 # a mask-aware stage NEVER leaves the fixed-shape array
                 # path — even a single tiny partial batch in a chained
@@ -310,35 +415,65 @@ class ArrayExecutor(_ExecutorBase):
                     self._apply_padded(stage, batch, target, rep))
             else:
                 # legacy/compat path: bytes-udf decode, per-shape tracing
-                out[t.executor].append(stage.apply_batch(batch))
+                # (shape-polymorphic UDFs see exact batches, never junk
+                # padding rows)
+                out[t.executor].append(stage.apply_batch(batch.compact()))
         return out
 
     # ----------------------------------------------------------- shuffle
     def bucketize(self, stage: SphereStage, out, n: int, rep: SphereReport
                   ) -> Tuple[List[List[RecordBatch]], Origins]:
-        """Array shuffle: per worker, one device-resident
-        ``bucket_scatter`` kernel call — ids, per-block histograms and
-        intra-block ranks on device, then a device scatter into
-        bucket-contiguous order.  Bucket ids never reach the host; the
-        one host sync per worker batch is the final per-bucket histogram
-        that slices the contiguous result (the same counts the planner's
-        movement pricing consumes via ``origins``).  Batches pad to
-        power-of-two row counts (floored at ``pad_block``), so the
-        kernel traces once per padded shape, not once per batch size."""
+        """Dispatch-then-sync array shuffle.
+
+        Phase 1 enqueues each worker's scatter without blocking —
+        :func:`scatter_pieces_dispatch` takes the worker's resident
+        pieces straight into ONE jitted call (stack + junk-tail mask +
+        key-extract + kernel trace as one fused program; no eager
+        concat-and-re-pad copy) whenever the pieces share a ladder
+        shape, and concatenates to the shape ladder otherwise.  Phase 2
+        harvests every dispatch's metadata behind ONE barrier and
+        resolves each worker's per-bucket pieces.  One kernel-path
+        shuffle round therefore costs exactly one host sync —
+        ``rep.host_syncs`` advances by 1 per round, not by the worker
+        count — which is the invariant tests assert.  Degenerate
+        batches (reduce rounds, single bucket) resolve at dispatch
+        time; a round of only those syncs zero times (host-loop
+        fallbacks excepted — they pay their sync at dispatch and say
+        so).
+
+        Batches pad to power-of-two-ladder row counts (floored at
+        ``pad_block``), so the kernel traces once per padded shape, not
+        once per batch size; padding-resident stage outputs feed the
+        scatter at their resident shape (junk tails ride to the kernel's
+        trash bucket) instead of being sliced and re-padded."""
         buckets: List[List[RecordBatch]] = [[] for _ in range(n)]
         origins: Origins = [{} for _ in range(n)]
+        rep.shuffle_rounds += 1
         t0 = time.perf_counter()
-        for w in self.workers:
-            if not out[w]:
+        round_: List[Tuple[str, int, object]] = []
+        for w in self.workers:                      # phase 1: dispatch all
+            pieces = out[w]
+            if not pieces:
                 continue
-            batch = RecordBatch.concat(out[w])
-            pieces = scatter_batch(batch, stage.partitioner, n,
-                                   pad_block=self.pad_block)
-            for i, piece in enumerate(pieces):
+            disp = scatter_pieces_dispatch(pieces, stage.partitioner, n,
+                                           pad_block=self.pad_block)
+            rep.host_syncs += disp.host_syncs
+            round_.append((w, sum(p.num_records for p in pieces), disp))
+        pending = [d for (_, _, d) in round_ if d.pending]
+        if pending:                                 # phase 2: one barrier
+            synced = jax.device_get([d.sync_arrays for d in pending])
+            rep.host_syncs += 1
+            for d, s in zip(pending, synced):
+                d.harvest(synced=s)
+        for w, nrec, disp in round_:
+            for i, piece in enumerate(disp.harvest()):
                 if piece.num_records:
                     buckets[i].append(piece)
                     origins[i][w] = piece.nbytes
-            rep.partitioned_records += batch.num_records
+            rep.partitioned_records += nrec
+        if self.timing_sync:
+            jax.block_until_ready([p.data for bucket in buckets
+                                   for p in bucket])
         rep.partition_seconds += time.perf_counter() - t0
         return buckets, origins
 
@@ -365,9 +500,11 @@ class ArrayExecutor(_ExecutorBase):
 
 def make_executor(backend: str, client, workers: Sequence[str], *,
                   max_retries: int = 3, pad_block: int = 4096,
-                  cache_chunks: bool = False):
+                  cache_chunks: bool = False, prefetch: bool = True,
+                  timing_sync: bool = False):
     if backend == "array":
         return ArrayExecutor(client, workers, max_retries=max_retries,
-                             pad_block=pad_block, cache_chunks=cache_chunks)
+                             pad_block=pad_block, cache_chunks=cache_chunks,
+                             prefetch=prefetch, timing_sync=timing_sync)
     return BytesExecutor(client, workers, max_retries=max_retries,
-                         cache_chunks=cache_chunks)
+                         cache_chunks=cache_chunks, prefetch=prefetch)

@@ -55,6 +55,15 @@ class SphereReport:
     # asserted on these two counters.
     planned_tasks: int = 0
     reused_tasks: int = 0
+    # overlap accounting for the dispatch-then-sync shuffle: shuffle
+    # rounds executed, and how often the data plane blocked the host on
+    # the device during them.  The array backend harvests every worker
+    # batch's histogram behind ONE barrier, so a kernel-path shuffle
+    # round costs exactly one host sync (host_syncs == shuffle_rounds —
+    # not workers x rounds); reduce/degenerate rounds resolve with zero
+    # syncs, and the bytes backend never syncs a device at all.
+    shuffle_rounds: int = 0
+    host_syncs: int = 0
 
 
 @dataclass(frozen=True)

@@ -26,7 +26,7 @@ Conventions shared by the bytes reference path and the array path:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -58,18 +58,49 @@ def uniform_hash_bounds(n_buckets: int) -> np.ndarray:
 
 @dataclass(frozen=True)
 class RecordBatch:
-    """Fixed-width records packed as a uint8 [n_records, record_size] array."""
+    """Fixed-width records packed as a uint8 [rows, record_size] array.
+
+    A batch may be *padding-resident*: ``n_valid`` (when set) says only
+    the first ``n_valid`` rows are real records and the tail rows are
+    shape padding whose CONTENT IS JUNK — never normalised, never
+    inspected.  Every consumer of a possibly-padded batch either slices
+    the valid prefix (``valid_data`` / the codecs below), masks the tail
+    inside a jitted call (pad-stable / mask-aware stage UDFs normalise
+    padding to their declared pad byte on device), or routes it to the
+    scatter kernel's trash bucket (``scatter_batch``'s dynamic
+    ``n_valid``).  This is what lets the engine pass fixed-shape blocks
+    between stages and shuffles without a slice-then-repad copy per hop.
+    ``n_valid is None`` means every row is real (the pre-existing exact
+    batch — all constructors outside the executor produce these).
+    """
 
     data: jax.Array
+    n_valid: Optional[int] = None
 
     def __post_init__(self):
         if self.data.ndim != 2:
             raise ValueError(f"RecordBatch data must be 2-D, "
                              f"got shape {self.data.shape}")
+        if self.n_valid is not None:
+            if not 0 <= self.n_valid <= self.data.shape[0]:
+                raise ValueError(f"n_valid {self.n_valid} outside "
+                                 f"[0, {self.data.shape[0]}]")
+            if self.n_valid == self.data.shape[0]:
+                # a fully-valid batch IS an exact batch — normalising to
+                # None keeps "padded" meaning strictly padded (and the
+                # concat fast path returning `is`-identical batches)
+                object.__setattr__(self, "n_valid", None)
 
     # ------------------------------------------------------------ shape
     @property
     def num_records(self) -> int:
+        """Real (valid) records — NOT the padded row count."""
+        return self.n_valid if self.n_valid is not None \
+            else self.data.shape[0]
+
+    @property
+    def padded_rows(self) -> int:
+        """Physical rows of the resident block, padding included."""
         return self.data.shape[0]
 
     @property
@@ -78,7 +109,40 @@ class RecordBatch:
 
     @property
     def nbytes(self) -> int:
-        return self.data.shape[0] * self.data.shape[1]
+        """Valid payload bytes — padding is free, so planner movement
+        pricing and part sizes agree with the bytes backend exactly."""
+        return self.num_records * self.data.shape[1]
+
+    # ---------------------------------------------------- padding views
+    @property
+    def valid_data(self) -> jax.Array:
+        """The [num_records, record_size] valid prefix (zero-copy for
+        exact batches)."""
+        return self.data if self.n_valid is None else self.data[:self.n_valid]
+
+    def compact(self) -> "RecordBatch":
+        """An exact batch holding only the valid rows (self when already
+        exact)."""
+        return self if self.n_valid is None \
+            else RecordBatch(self.data[:self.n_valid])
+
+    def block(self, n_rows: int) -> jax.Array:
+        """A [n_rows, record_size] block whose first ``num_records`` rows
+        are the valid records — tail content is JUNK (reused resident
+        padding, or zeros when the block grows).  This is the no-copy
+        hand-off into fixed-shape jitted consumers: same shape reuses the
+        resident array as-is, a larger resident block is prefix-sliced.
+        """
+        n = self.num_records
+        if n > n_rows:
+            raise ValueError(f"cannot fit {n} records in a {n_rows}-row "
+                             f"block")
+        rows = self.data.shape[0]
+        if rows == n_rows:
+            return self.data
+        if rows > n_rows:
+            return self.data[:n_rows]
+        return jnp.pad(self.data, ((0, n_rows - rows), (0, 0)))
 
     # ------------------------------------------------------------ codecs
     @staticmethod
@@ -101,11 +165,12 @@ class RecordBatch:
         return RecordBatch.from_bytes(b"".join(records), width)
 
     def to_bytes(self) -> bytes:
-        return np.asarray(self.data).tobytes()
+        # valid rows only — padding never leaks into materialised output
+        return np.asarray(self.data)[:self.num_records].tobytes()
 
     def to_records(self) -> List[bytes]:
         raw = np.asarray(self.data)
-        return [raw[i].tobytes() for i in range(raw.shape[0])]
+        return [raw[i].tobytes() for i in range(self.num_records)]
 
     # ------------------------------------------------------ restructuring
     @staticmethod
@@ -114,6 +179,9 @@ class RecordBatch:
 
     @staticmethod
     def concat(batches: Sequence["RecordBatch"]) -> "RecordBatch":
+        """Concatenate valid records.  A single non-empty input returns
+        ITSELF (no copy — and a padding-resident batch stays resident);
+        multi-input concat materialises the valid prefixes."""
         if not batches:
             raise ValueError("cannot concat zero batches")
         nonempty = [b for b in batches if b.num_records]
@@ -121,24 +189,58 @@ class RecordBatch:
             return batches[0]
         if len(nonempty) == 1:
             return nonempty[0]
-        return RecordBatch(jnp.concatenate([b.data for b in nonempty],
+        return RecordBatch(jnp.concatenate([b.valid_data for b in nonempty],
                                            axis=0))
 
+    @staticmethod
+    def concat_block(batches: Sequence["RecordBatch"], n_rows: int
+                     ) -> "RecordBatch":
+        """Concatenate valid records straight into an ``n_rows`` block —
+        the concat+pad fusion.  The result is padding-resident (zeros
+        tail) at exactly ``n_rows`` rows, so a downstream
+        ``block(n_rows)`` hands the array over untouched: one copy total
+        where ``concat`` + ``block`` would pay two.  A single non-empty
+        input already at ``n_rows`` rows returns ITSELF."""
+        if not batches:
+            raise ValueError("cannot concat zero batches")
+        nonempty = [b for b in batches if b.num_records]
+        if len(nonempty) == 1 and nonempty[0].padded_rows == n_rows:
+            return nonempty[0]
+        nrec = sum(b.num_records for b in nonempty)
+        if nrec > n_rows:
+            raise ValueError(f"cannot fit {nrec} records in a {n_rows}-row "
+                             f"block")
+        width = batches[0].record_size
+        parts = [b.valid_data for b in nonempty]
+        if nrec < n_rows:
+            parts.append(jnp.zeros((n_rows - nrec, width), jnp.uint8))
+        return RecordBatch(jnp.concatenate(parts, axis=0), n_valid=nrec)
+
     def take(self, idx) -> "RecordBatch":
+        """Gather rows by index.  Valid rows always form the block's
+        prefix, so indices < ``num_records`` address the same records on
+        exact and padding-resident batches alike."""
         return RecordBatch(jnp.take(self.data, jnp.asarray(idx), axis=0))
 
     def pad_to(self, n_rows: int, pad_value: int = 0) -> "RecordBatch":
-        """Right-pad with ``pad_value`` rows up to ``n_rows`` (the fixed
-        block shape of pad-stable / mask-aware stage UDFs)."""
+        """Right-pad with MATERIALISED ``pad_value`` rows up to ``n_rows``
+        and return an exact batch — the explicit-padding legacy/API path
+        (the executor's hot path uses :meth:`block`, whose padding stays
+        junk and is normalised on device instead)."""
         n = self.num_records
         if n_rows < n:
             raise ValueError(f"cannot pad {n} records down to {n_rows}")
         if n_rows == n:
-            return self
-        return RecordBatch(jnp.pad(self.data, ((0, n_rows - n), (0, 0)),
+            return self.compact() if self.n_valid is not None else self
+        return RecordBatch(jnp.pad(self.valid_data,
+                                   ((0, n_rows - n), (0, 0)),
                                    constant_values=pad_value))
 
     # --------------------------------------------------------------- keys
+    # Key views are BLOCK-level: they cover every physical row, padding
+    # included (the scatter kernel trash-buckets rows >= its dynamic
+    # n_valid, and in-jit callers see normalised padding).  Host-side
+    # analysis paths compact() a padding-resident batch first.
     def keys_u32(self, width: int = 4) -> jax.Array:
         """Big-endian uint32 of each record's first ``width`` (<= 4) bytes,
         zero-padded — order-isomorphic to lexicographic comparison of the
@@ -202,19 +304,25 @@ class RecordBatch:
         return jnp.stack(words, axis=1)
 
     def sort_by_key(self, key_bytes: int) -> "RecordBatch":
-        """Stable sort by the full key prefix (lexicographic, any length)."""
-        words = self._key_words(key_bytes)
+        """Stable sort by the full key prefix (lexicographic, any length).
+
+        Sorts the VALID records (junk padding rows must not interleave);
+        pad-stable stage UDFs call this on in-jit blocks whose padding
+        was already normalised, where compact() is a no-op."""
+        base = self.compact()
+        words = base._key_words(key_bytes)
         # jnp.lexsort treats the LAST key as primary
         order = jnp.lexsort(tuple(reversed(words)))
-        return self.take(order)
+        return base.take(order)
 
     # ------------------------------------------------------- float views
     def to_points(self, dim: int) -> jax.Array:
-        """Reinterpret records as little-endian float32 [n, dim] points."""
+        """Reinterpret valid records as little-endian float32 [n, dim]
+        points (junk padding rows would bitcast to garbage floats)."""
         if self.record_size != 4 * dim:
             raise ValueError(f"record_size {self.record_size} != 4*dim")
         return jax.lax.bitcast_convert_type(
-            self.data.reshape(self.num_records, dim, 4), jnp.float32)
+            self.valid_data.reshape(self.num_records, dim, 4), jnp.float32)
 
     @staticmethod
     def from_points(points: jax.Array) -> "RecordBatch":

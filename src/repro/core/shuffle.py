@@ -7,11 +7,16 @@ bytes reference path, unchanged engine protocol) and additionally exposes
   kernels compare, or ``None`` when the batch must take the host loop;
 * ``bucket_ids(batch, n)`` — ids + histogram via ``bucket_partition``
   (the analysis path: ids come back to the caller);
-* :func:`scatter_batch` — the engine shuffle path: the ``bucket_scatter``
-  kernel lands records bucket-contiguously ON DEVICE (stable counting
-  scatter), and the only host sync is the final [n] histogram that
-  slices the contiguous result into per-bucket batches (the same counts
-  the planner's movement pricing needs).  Batches are padded to a
+* :func:`scatter_dispatch` / :func:`scatter_batch` — the engine shuffle
+  path: the ``bucket_scatter`` kernel lands records bucket-contiguously
+  ON DEVICE (stable counting scatter), and the only host sync is the
+  final [n] histogram that slices the contiguous result into per-bucket
+  batches (the same counts the planner's movement pricing needs).
+  ``scatter_dispatch`` enqueues that work without blocking and defers
+  the histogram sync into :meth:`ScatterDispatch.harvest`, so a caller
+  shuffling many batches (the engine's per-worker loop) dispatches them
+  all and pays ONE barrier per shuffle round; ``scatter_batch`` is the
+  dispatch-plus-immediate-harvest convenience.  Batches are padded to a
   power-of-two row count and ``n_valid`` is dynamic, so one kernel trace
   serves every batch size at a given padded shape — this is what keeps
   engine-level throughput at kernel speed instead of re-tracing per
@@ -35,8 +40,9 @@ the two paths agree record-for-record:
 from __future__ import annotations
 
 from bisect import bisect_left
+from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -45,7 +51,8 @@ import jax.numpy as jnp
 
 from repro.core.records import (RecordBatch, fnv1a32, scatter_by_ids,
                                 uniform_hash_bounds)
-from repro.kernels.bucket_partition import bucket_partition, bucket_scatter
+from repro.kernels.bucket_partition import (bucket_dest, bucket_partition,
+                                            bucket_scatter)
 
 
 def _kernel_partition(keys: jax.Array, bounds_u32: np.ndarray, n: int,
@@ -239,6 +246,7 @@ def partition_batch(batch: RecordBatch, partitioner, n: int, *,
     ``(record, n) -> int`` callables fall back to a per-record host loop
     so the array backend stays correct for custom partitioners.
     """
+    batch = batch.compact()  # analysis keys are host-visible: no junk rows
     if hasattr(partitioner, "bucket_ids"):
         return partitioner.bucket_ids(batch, n, block_n=block_n,
                                       interpret=interpret)
@@ -271,6 +279,33 @@ def _pow2_rows(n: int, floor: int) -> int:
     return target
 
 
+def _quarter_rows(n: int, floor: int) -> int:
+    """Smallest padded row count >= n from the quarter-octave
+    {2^k, 1.25*2^k, 1.5*2^k, 1.75*2^k} ladder, floored at ``floor``.
+
+    Finer than :func:`_pow2_rows` on purpose: the once-per-stage block
+    shape is computed a single time from the plan's largest task, so a
+    denser ladder costs no extra traces there — and it caps the
+    junk-tail at ~25% worst case (typically a few percent) where the
+    half-octave ladder allows ~33%.  That junk tail is not free: every
+    padding row rides through the segmented scatter's mask, kernel scan
+    and destination fetch each round (e.g. 5 000-record stage-0 chunks
+    pad to 5 120 here vs 6 144 on the half-octave ladder — an 18%
+    shuffle-volume cut at the TeraSort 1M scale).  Ad-hoc batch padding
+    (``scatter_batch``) keeps the coarser ladder, where fewer rungs
+    means more trace sharing across varying batch sizes."""
+    base = max(floor, 4)
+    while base * 2 < n:
+        base *= 2
+    if n <= base:
+        return base
+    for num in (5, 6, 7):
+        cand = base * num // 4
+        if cand >= n:
+            return cand
+    return base * 2
+
+
 def _single_bucket_pieces(batch: RecordBatch, n: int) -> List[RecordBatch]:
     return [batch] + [RecordBatch.empty(batch.record_size)
                       for _ in range(max(n, 1) - 1)]
@@ -286,31 +321,177 @@ def _scatter_padded(data, bounds, n_valid, *, n_buckets: int, key_spec,
     kernel, and its scan/scatter epilogue.  Re-traces only per
     (padded shape, key spec, n_buckets) — never per record count,
     because ``n_valid`` is dynamic."""
-    batch = RecordBatch(data)
-    if key_spec[0] == "hash":
-        keys = batch.hash_keys_u32(key_spec[1])
-    else:
-        _, key_len, n_words, length_word = key_spec
-        keys = batch.key_words(key_len, n_words=n_words,
-                               length_word=length_word)
+    keys = _extract_keys(data, key_spec)
     return bucket_scatter(data, keys, bounds, n_valid, n_buckets=n_buckets,
                           block_n=block_n, interpret=interpret)
 
 
-def scatter_batch(batch: RecordBatch, partitioner, n: int, *,
-                  pad_block: int = 4096, block_n: int | None = None,
-                  interpret: bool | None = None) -> List[RecordBatch]:
-    """Device-resident shuffle: batch in, n bucket-sliced batches out.
+def _cpu_block_n(rows: int) -> int | None:
+    """Grid size for the interpret (CPU) kernel, or None for a single
+    block.  The in-kernel rank scan is O(rows log rows) *per block*, so
+    gridding a large input into 64k blocks beats one giant block by
+    ~25% (measured: four 64k blocks vs one 256k block) and by several
+    x at the 1M single-batch shape; below ~1.5 blocks the
+    pad-to-block-multiple junk rows would outweigh the saved scan
+    levels."""
+    return 65536 if rows > 98304 else None
 
-    The fast path pads the batch to a power-of-two row count (floored at
-    ``pad_block``) and runs ONE jitted call — key extraction,
-    ``bucket_scatter`` kernel and scan/scatter epilogue — with the real
-    row count as a *dynamic* argument: records land bucket-contiguously
-    on device without the bucket ids ever reaching the host, and one
-    trace serves every batch size at a given padded shape.  The ONE host
-    sync is the final [n] histogram, which both slices the contiguous
-    result into per-bucket batches and gives the planner its per-bucket
-    movement sizes.
+
+def _extract_keys(data, key_spec):
+    batch = RecordBatch(data)
+    if key_spec[0] == "hash":
+        return batch.hash_keys_u32(key_spec[1])
+    _, key_len, n_words, length_word = key_spec
+    return batch.key_words(key_len, n_words=n_words, length_word=length_word)
+
+
+@partial(jax.jit,
+         static_argnames=("n_buckets", "key_spec", "block_n", "interpret"))
+def _scatter_dest_padded(data, bounds, n_valid, *, n_buckets: int, key_spec,
+                         block_n: int | None, interpret: bool):
+    """The data-free twin of :func:`_scatter_padded`: key extraction +
+    kernel + scan epilogue, stopping at the destination vector instead
+    of moving the rows.  Used on CPU, where XLA lowers the [rows]
+    permutation-inverting scatter at ~40ns/element while numpy's fancy
+    assignment inverts it host-side at memcpy speed — so the rows are
+    moved by a plain device gather against the host-inverted
+    permutation at harvest time (see :meth:`ScatterDispatch.harvest`).
+    """
+    keys = _extract_keys(data, key_spec)
+    return bucket_dest(keys, bounds, n_valid, n_buckets=n_buckets,
+                       block_n=block_n, interpret=interpret)
+
+
+@partial(jax.jit,
+         static_argnames=("n_buckets", "key_spec", "block_n", "interpret"))
+def _scatter_dest_segments(pieces, bounds, n_valids, *, n_buckets: int,
+                           key_spec, block_n: int | None, interpret: bool):
+    """Segmented twin of :func:`_scatter_dest_padded` for a WHOLE round:
+    ``pieces`` is a tuple of s [rows, width] resident pieces at one
+    ladder shape, junk tails in place — and ``n_valids`` [s] their
+    dynamic valid counts.  The stack happens INSIDE the trace: an eager
+    ``jnp.stack`` over s arrays dispatches s reshapes plus a
+    concatenate (~1ms of pure host overhead per piece on CPU — it was
+    the single largest line of a profiled round), while here XLA sees
+    one fused concatenate.  Rows flatten in piece order and each
+    piece's junk tail is masked into the trash bucket, so the
+    destination vector orders valid rows bucket-major then
+    global-input-major across the whole stack — exactly the order a
+    concat of the pieces would have produced, without ever
+    materialising the concat eagerly.  Returns the flattened data
+    alongside (dest, hist) so the harvest gathers straight off it.
+    Re-traces only per (piece count, piece shape, key spec, n_buckets)
+    — ``n_valids`` is dynamic.
+
+    The flatten is a direct 2D ``jnp.concatenate``, NOT stack+reshape:
+    XLA:CPU turns the [s, rows, width] stack of 2D operands plus the
+    flattening reshape into a program ~3x slower than the plain
+    concatenate (measured 61-79ms vs 20-25ms for 33 x [6144, 100]
+    uint8 pieces), while the 2D concat compiles to one linear copy."""
+    rows, width = pieces[0].shape
+    s = len(pieces)
+    data = jnp.concatenate(pieces, axis=0)
+    keys = _extract_keys(data, key_spec)
+    pos = jax.lax.iota(jnp.int32, s * rows)
+    valid = (pos % rows) < n_valids[pos // rows]
+    dest, hist = bucket_dest(keys, bounds, valid.astype(jnp.int32),
+                             n_buckets=n_buckets, block_n=block_n,
+                             interpret=interpret)
+    return data, dest, hist
+
+
+@dataclass
+class ScatterDispatch:
+    """The in-flight half of a dispatch-then-sync shuffle.
+
+    :func:`scatter_dispatch` returns one of these per batch after
+    enqueueing all device work (pad, key extraction, kernel, epilogue)
+    WITHOUT blocking.  A caller shuffling many batches dispatches them
+    all first — the device queue stays full — then fetches every
+    dispatch's :attr:`sync_arrays` in one host barrier and calls
+    :meth:`harvest` with the synced values.  ``harvest()`` with no
+    argument syncs this dispatch's own metadata (the compatibility path
+    :func:`scatter_batch` uses).
+
+    A pending dispatch is in one of two shapes, per backend:
+
+    * **compiled (TPU/GPU)** — ``out`` holds the bucket-contiguous rows
+      (the kernel's device epilogue already moved them); harvest slices
+      it by the synced histogram.
+    * **host-invert (CPU)** — ``src`` holds the untouched padded block
+      and ``dest`` the destination vector; harvest inverts the
+      permutation host-side (numpy fancy assignment at memcpy speed,
+      where XLA:CPU's scatter crawls at ~40ns/element) and gathers each
+      bucket's rows off ``src`` directly — only valid rows ever move.
+
+    Either way the barrier is ONE ``device_get`` per round of [n]-sized
+    (plus, on CPU, [rows]-sized int32) metadata — record bytes stay on
+    device.  Degenerate/fallback shapes resolve at dispatch time into
+    ``pieces``: those harvest for free, and ``host_syncs`` records any
+    sync the fallback already paid (1 for the per-record host loop, else
+    0), so executor-level sync accounting stays truthful.
+    """
+
+    n: int                                        # bucket count
+    pieces: Optional[List[RecordBatch]] = None    # resolved at dispatch
+    out: Optional[jax.Array] = None               # compiled: scattered rows
+    src: Optional[jax.Array] = None               # host-invert: padded block
+    dest: Optional[jax.Array] = None              # host-invert: [rows] dest
+    hist: Optional[jax.Array] = None              # pending [n] counts
+    host_syncs: int = field(default=0)            # syncs paid at dispatch
+
+    @property
+    def pending(self) -> bool:
+        """True when metadata must reach the host before slicing."""
+        return self.pieces is None
+
+    @property
+    def sync_arrays(self):
+        """The device values the round barrier must fetch: the [n]
+        histogram, plus the destination vector on the host-invert path."""
+        return (self.hist,) if self.dest is None else (self.hist, self.dest)
+
+    def harvest(self, synced=None) -> List[RecordBatch]:
+        """Per-bucket batches.  ``synced`` is the already-fetched
+        :attr:`sync_arrays` tuple (numpy); omitted, the dispatch syncs
+        its own."""
+        if self.pieces is not None:
+            return self.pieces
+        if synced is None:
+            synced = jax.device_get(self.sync_arrays)   # host sync
+        hist = np.asarray(synced[0])
+        offsets = np.concatenate([[0], np.cumsum(hist)])
+        if self.out is not None:
+            self.pieces = [RecordBatch(self.out[offsets[i]:offsets[i + 1]])
+                           for i in range(self.n)]
+        else:
+            dest = np.asarray(synced[1])
+            perm = np.empty(dest.shape[0], np.int32)
+            perm[dest] = np.arange(dest.shape[0], dtype=np.int32)
+            self.pieces = [
+                RecordBatch(jnp.take(self.src,
+                                     jnp.asarray(perm[offsets[i]:
+                                                      offsets[i + 1]]),
+                                     axis=0))
+                for i in range(self.n)]
+        return self.pieces
+
+
+def scatter_dispatch(batch: RecordBatch, partitioner, n: int, *,
+                     pad_block: int = 4096, block_n: int | None = None,
+                     interpret: bool | None = None) -> ScatterDispatch:
+    """Enqueue the device-resident shuffle of one batch; never blocks.
+
+    The fast path places the batch in a power-of-two-ladder block
+    (floored at ``pad_block``; a padding-resident batch at a usable
+    shape is reused as-is, junk tail included) and runs ONE jitted call
+    — key extraction, ``bucket_scatter`` kernel and scan/scatter
+    epilogue — with the real row count as a *dynamic* argument: records
+    land bucket-contiguously on device without the bucket ids ever
+    reaching the host, and one trace serves every batch size at a given
+    padded shape.  The ONE host sync each batch ever needs is the final
+    [n] histogram, deferred into :meth:`ScatterDispatch.harvest` so a
+    caller with many batches pays it once for all of them.
 
     Within a bucket records keep input order (the kernel's stability
     guarantee), matching the bytes backend's append order exactly.
@@ -322,26 +503,118 @@ def scatter_batch(batch: RecordBatch, partitioner, n: int, *,
     """
     nrec = batch.num_records
     if n <= 1:
-        return [batch]
+        return ScatterDispatch(n, pieces=[batch])
     if nrec == 0:
-        return [batch.take(jnp.zeros((0,), jnp.int32)) for _ in range(n)]
+        empty = [batch.take(jnp.zeros((0,), jnp.int32)) for _ in range(n)]
+        return ScatterDispatch(n, pieces=empty)
     if isinstance(partitioner, ReducePartitioner):
-        return _single_bucket_pieces(batch, n)
+        return ScatterDispatch(n, pieces=_single_bucket_pieces(batch, n))
     if not hasattr(partitioner, "scatter_spec"):
         ids, hist = _host_partition(batch, partitioner, n)
-        return scatter_by_ids(batch, ids, hist)
+        return ScatterDispatch(n, pieces=scatter_by_ids(batch, ids, hist),
+                               host_syncs=1)
     spec = partitioner.scatter_spec(batch, n)
     if spec is None:
-        return _single_bucket_pieces(batch, n)
+        return ScatterDispatch(n, pieces=_single_bucket_pieces(batch, n))
     key_spec, bounds = spec
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    padded = batch.pad_to(_pow2_rows(nrec, min(pad_block, 1 << 20)))
-    out, hist = _scatter_padded(padded.data, jnp.asarray(bounds), nrec,
+        # compiled Pallas lowering on real accelerators (TPU Mosaic /
+        # GPU Triton); interpret mode only on CPU
+        interpret = jax.default_backend() not in ("tpu", "gpu")
+    data = batch.block(_pow2_rows(nrec, min(pad_block, 1 << 20)))
+    if interpret:
+        # CPU: stop the jitted call at the destination vector and let
+        # harvest invert it host-side — numpy's fancy assignment beats
+        # XLA:CPU's [rows] int32 scatter ~15x, and the harvest gather
+        # then touches only the valid rows
+        if block_n is None:
+            block_n = _cpu_block_n(data.shape[0])
+        dest, hist = _scatter_dest_padded(data, jnp.asarray(bounds), nrec,
+                                          n_buckets=n, key_spec=key_spec,
+                                          block_n=block_n, interpret=True)
+        return ScatterDispatch(n, src=data, dest=dest, hist=hist)
+    out, hist = _scatter_padded(data, jnp.asarray(bounds), nrec,
                                 n_buckets=n, key_spec=key_spec,
                                 block_n=block_n, interpret=interpret)
-    offsets = np.concatenate([[0], np.cumsum(np.asarray(hist))])  # host sync
-    return [RecordBatch(out[offsets[i]:offsets[i + 1]]) for i in range(n)]
+    return ScatterDispatch(n, out=out, hist=hist)
+
+
+def scatter_batch(batch: RecordBatch, partitioner, n: int, *,
+                  pad_block: int = 4096, block_n: int | None = None,
+                  interpret: bool | None = None) -> List[RecordBatch]:
+    """Device-resident shuffle: batch in, n bucket-sliced batches out.
+
+    Dispatch + immediate harvest (one host sync) — see
+    :func:`scatter_dispatch` for the split the engine's shuffle loop
+    uses to amortise that sync across every worker batch of a round.
+    """
+    return scatter_dispatch(batch, partitioner, n, pad_block=pad_block,
+                            block_n=block_n, interpret=interpret).harvest()
+
+
+def scatter_pieces_dispatch(pieces: Sequence[RecordBatch], partitioner,
+                            n: int, *, pad_block: int = 4096,
+                            block_n: int | None = None,
+                            interpret: bool | None = None
+                            ) -> ScatterDispatch:
+    """Enqueue one worker's stage output — its list of resident pieces —
+    as a single scatter; never blocks.
+
+    The fast path is the SEGMENTED scatter: when every piece shares one
+    resident ladder shape (the executor's fixed per-stage blocks make
+    that the common case) and the partitioner is on the host-invert
+    kernel path, the pieces enter the jitted call as a pytree and the
+    stack, junk-tail masking and key extraction all trace into one
+    fused program.  That removes the eager concat-to-ladder copy and
+    its per-piece dispatch overhead (~1ms/op on a CPU host — profiled
+    as the largest single line of a shuffle round), and the kernel runs
+    on the pieces' resident rows instead of a re-padded ladder block.
+    The destination vector still orders valid rows bucket-major then
+    piece-then-input-major — byte-identical to what a concat would
+    have produced.
+
+    Everything else (single piece, ragged piece shapes, degenerate or
+    host-loop partitioners, compiled backends whose device epilogue
+    already moves the rows) concatenates and falls through to
+    :func:`scatter_dispatch`, so the caller sees one ScatterDispatch
+    either way.
+    """
+    if len(pieces) == 1:
+        return scatter_dispatch(pieces[0], partitioner, n,
+                                pad_block=pad_block, block_n=block_n,
+                                interpret=interpret)
+    if interpret is None:
+        interpret = jax.default_backend() not in ("tpu", "gpu")
+    kernelish = (n > 1 and not isinstance(partitioner, ReducePartitioner)
+                 and getattr(partitioner, "scatter_spec", None) is not None)
+    nrec = sum(p.num_records for p in pieces)
+    if kernelish and interpret and nrec:
+        rows = pieces[0].padded_rows
+        width = pieces[0].record_size
+        if rows and all(p.padded_rows == rows and p.record_size == width
+                        for p in pieces):
+            spec = partitioner.scatter_spec(pieces[0], n)
+            if spec is not None:
+                key_spec, bounds = spec
+                if block_n is None:
+                    block_n = _cpu_block_n(len(pieces) * rows)
+                n_valids = jnp.asarray([p.num_records for p in pieces],
+                                       jnp.int32)
+                src, dest, hist = _scatter_dest_segments(
+                    tuple(p.data for p in pieces), jnp.asarray(bounds),
+                    n_valids, n_buckets=n, key_spec=key_spec,
+                    block_n=block_n, interpret=True)
+                return ScatterDispatch(n, src=src, dest=dest, hist=hist)
+    if kernelish and nrec:
+        # concat+pad fusion for the non-segmented kernel path: build the
+        # shape-ladder block the scatter would pad to anyway in ONE
+        # copy, so scatter_dispatch's block() is a shape-match no-op
+        batch = RecordBatch.concat_block(
+            pieces, _pow2_rows(nrec, min(pad_block, 1 << 20)))
+    else:
+        batch = RecordBatch.concat(list(pieces))
+    return scatter_dispatch(batch, partitioner, n, pad_block=pad_block,
+                            block_n=block_n, interpret=interpret)
 
 
 def terasort_stages(bounds: Sequence[bytes], backend: str, n_buckets: int,

@@ -209,7 +209,9 @@ class SphereStream:
                                       self._workers,
                                       max_retries=self.engine.max_retries,
                                       pad_block=self.engine.pad_block,
-                                      cache_chunks=self._cache_chunks)
+                                      cache_chunks=self._cache_chunks,
+                                      prefetch=self.engine.prefetch,
+                                      timing_sync=self.engine.timing_sync)
         self._needs_bind = False
 
     @property

@@ -1,4 +1,5 @@
-from repro.kernels.bucket_partition.ops import (bucket_partition,  # noqa: F401
+from repro.kernels.bucket_partition.ops import (bucket_dest,  # noqa: F401
+                                                bucket_partition,
                                                 bucket_scatter)
 from repro.kernels.bucket_partition.ref import (bucket_partition_ref,  # noqa: F401
                                                 bucket_scatter_ref)

@@ -135,16 +135,18 @@ def bucket_partition_call(keys: jax.Array, bounds: jax.Array, *,
     return ids[:N], hist
 
 
-def _scatter_kernel(nvalid_ref, keys_ref, bounds_ref, ids_ref, rank_ref,
+def _scatter_kernel(valid_ref, keys_ref, bounds_ref, ids_ref, rank_ref,
                     bhist_ref, *, n_out: int, bn: int):
     """Scatter pass: per-block ids, intra-block stable ranks, block hists.
 
-    Unlike :func:`_kernel`, ``n_valid`` arrives as a *dynamic* scalar
-    input, so one trace serves every record count at a fixed padded
-    shape — the property that keeps the engine path compile-once.
-    Padded rows (position >= n_valid) get id ``n_out`` (the trash bucket
-    ordered after every real bucket); real ids are clamped to
-    ``n_out - 1`` when the boundary table implies more buckets.
+    Unlike :func:`_kernel`, validity arrives as a *dynamic* [bn] int32
+    mask input, so one trace serves every record count (and any
+    interleaving of padding — e.g. several resident pieces stacked with
+    their junk tails in place) at a fixed padded shape — the property
+    that keeps the engine path compile-once.  Masked rows get id
+    ``n_out`` (the trash bucket ordered after every real bucket); real
+    ids are clamped to ``n_out - 1`` when the boundary table implies
+    more buckets.
 
     The intra-block rank is a same-bucket prefix count: with ``csum`` the
     inclusive running one-hot count, ``rank[r] = csum[r, ids[r]] - 1``
@@ -152,17 +154,104 @@ def _scatter_kernel(nvalid_ref, keys_ref, bounds_ref, ids_ref, rank_ref,
     kernel).  ``bhist_ref`` gets this block's [1, n_out + 1] bucket
     counts; the epilogue turns block hists into global offsets.
     """
-    i = pl.program_id(0)
     raw = _compare_ids(keys_ref[...], bounds_ref[...])
     ids = jnp.minimum(raw, n_out - 1)
-    pos = i * bn + jax.lax.iota(jnp.int32, bn)
-    ids = jnp.where(pos < nvalid_ref[0], ids, n_out)
+    ids = jnp.where(valid_ref[...] != 0, ids, n_out)
     onehot = (ids[:, None]
               == jax.lax.iota(jnp.int32, n_out + 1)[None, :]).astype(jnp.int32)
-    csum = jnp.cumsum(onehot, axis=0)           # inclusive running count
+    # inclusive running count — associative_scan's log-depth ladder beats
+    # XLA's sequential cumsum lowering ~1.5x on the [bn, n_out + 1] shape
+    csum = jax.lax.associative_scan(jnp.add, onehot, axis=0)
     ids_ref[...] = ids
     rank_ref[...] = jnp.sum(onehot * (csum - 1), axis=1)
     bhist_ref[...] = csum[-1:, :]
+
+
+def bucket_dest_call(keys: jax.Array, bounds: jax.Array, n_valid, *,
+                     n_out: int, block_n: int = 2048,
+                     interpret: bool = False):
+    """Destination indices + histogram of the stable counting scatter.
+
+    ``keys``: [N] or [N, k] uint32 key rows; ``bounds``: [n_bounds] or
+    [n_bounds, k] sorted boundary rows; ``n_valid``: either a dynamic
+    scalar (the leading ``n_valid`` rows are real, the rest shape
+    padding) or a dynamic [N] int32/bool mask marking real rows
+    anywhere in the batch (stacked resident pieces keep their junk
+    tails in place) — masked-out rows go to the trash bucket after
+    every real bucket either way.
+
+    Returns ``(dest [Np] int32, hist [n_out] int32)`` where ``Np`` is
+    ``N`` rounded up to a ``block_n`` multiple and ``dest[r]`` is the
+    bucket-contiguous, input-stable output position of row ``r`` —
+    ``dest`` is a permutation of ``[0, Np)`` with every valid row landing
+    below ``hist.sum()``.  The destination of record ``r`` in block ``i``
+    with bucket ``b`` is ``bucket_start[b] + count of b in blocks < i +
+    intra-block rank`` — the classic three-level exclusive-scan scatter,
+    with the two outer scans (over buckets and over blocks) done by the
+    XLA epilogue on the kernel's per-block histograms.  This is the
+    data-free half of :func:`bucket_scatter_call`; callers that can move
+    the rows more cheaply themselves (e.g. a host-side permutation
+    inversion on CPU) stop here.
+    """
+    if keys.ndim == 1:
+        keys = keys[:, None]
+    if bounds.ndim == 1:
+        bounds = bounds[:, None]
+    if keys.shape[1] != bounds.shape[1]:
+        raise ValueError(f"keys have {keys.shape[1]} words per row but "
+                         f"bounds have {bounds.shape[1]}")
+    N, k = keys.shape
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:  # masked-out rows are trash-bucketed, so padding is benign
+        keys = jnp.pad(keys, ((0, pad), (0, 0)))
+    Np = keys.shape[0]
+    nb = Np // bn
+    nv = jnp.asarray(n_valid)
+    if nv.ndim == 0:       # scalar count -> prefix-validity mask
+        valid = (jax.lax.iota(jnp.int32, Np)
+                 < nv.astype(jnp.int32)).astype(jnp.int32)
+    else:
+        if nv.shape[0] != N:
+            raise ValueError(f"validity mask has {nv.shape[0]} rows but "
+                             f"keys have {N}")
+        valid = nv.astype(jnp.int32)
+        if pad:
+            valid = jnp.pad(valid, (0, pad))
+
+    kern = functools.partial(_scatter_kernel, n_out=n_out, bn=bn)
+    ids, rank, bhist = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bounds.shape[0], k), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1, n_out + 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np,), jnp.int32),
+            jax.ShapeDtypeStruct((Np,), jnp.int32),
+            jax.ShapeDtypeStruct((nb, n_out + 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(valid, keys, bounds)
+
+    total = jnp.sum(bhist, axis=0)              # [n_out + 1]
+    starts = jnp.cumsum(total) - total          # exclusive bucket starts
+    if nb == 1:
+        # single grid block (the CPU/interpret default): the inter-block
+        # exclusive scan is identically zero, so skip its 2-D gather
+        dest = starts[ids] + rank
+    else:
+        blk_excl = jnp.cumsum(bhist, axis=0) - bhist  # [nb, n_out + 1]
+        block_of = jax.lax.iota(jnp.int32, Np) // bn
+        dest = starts[ids] + blk_excl[block_of, ids] + rank
+    return dest, total[:n_out]
 
 
 def bucket_scatter_call(data: jax.Array, keys: jax.Array, bounds: jax.Array,
@@ -181,64 +270,23 @@ def bucket_scatter_call(data: jax.Array, keys: jax.Array, bounds: jax.Array,
     ``[sum(hist[:b]), sum(hist[:b+1]))``.  Everything stays on device;
     the caller decides when (if ever) to sync ``hist``.
 
-    The destination index of record ``r`` in block ``i`` with bucket
-    ``b`` is ``bucket_start[b] + count of b in blocks < i +
-    intra-block rank`` — the classic three-level exclusive-scan scatter,
-    with the two outer scans (over buckets and over blocks) done by the
-    XLA epilogue on the kernel's per-block histograms.
+    Destination indices come from :func:`bucket_dest_call`; the move
+    here inverts the destination permutation with a [Np] int32 scatter,
+    then gathers the wide uint8 rows (XLA lowers the row gather several
+    times faster than the equivalent row scatter).
     """
     if keys.ndim == 1:
         keys = keys[:, None]
-    if bounds.ndim == 1:
-        bounds = bounds[:, None]
-    if keys.shape[1] != bounds.shape[1]:
-        raise ValueError(f"keys have {keys.shape[1]} words per row but "
-                         f"bounds have {bounds.shape[1]}")
     if data.shape[0] != keys.shape[0]:
         raise ValueError(f"data has {data.shape[0]} rows but keys have "
                          f"{keys.shape[0]}")
-    N, k = keys.shape
-    bn = min(block_n, N)
-    pad = (-N) % bn
-    if pad:  # rows past n_valid are trash-bucketed, so padding is benign
-        keys = jnp.pad(keys, ((0, pad), (0, 0)))
-        data = jnp.pad(data, ((0, pad), (0, 0)))
-    Np = keys.shape[0]
-    nb = Np // bn
-    nv = jnp.asarray(n_valid, jnp.int32).reshape((1,))
-
-    kern = functools.partial(_scatter_kernel, n_out=n_out, bn=bn)
-    ids, rank, bhist = pl.pallas_call(
-        kern,
-        grid=(nb,),
-        in_specs=[
-            pl.BlockSpec((1,), lambda i: (0,)),
-            pl.BlockSpec((bn, k), lambda i: (i, 0)),
-            pl.BlockSpec((bounds.shape[0], k), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bn,), lambda i: (i,)),
-            pl.BlockSpec((bn,), lambda i: (i,)),
-            pl.BlockSpec((1, n_out + 1), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Np,), jnp.int32),
-            jax.ShapeDtypeStruct((Np,), jnp.int32),
-            jax.ShapeDtypeStruct((nb, n_out + 1), jnp.int32),
-        ],
-        interpret=interpret,
-    )(nv, keys, bounds)
-
-    # device epilogue: two exclusive scans -> destination index -> move.
-    # The move inverts the destination permutation with a cheap [Np]
-    # int32 scatter, then gathers the wide uint8 rows: XLA lowers the
-    # row gather several times faster than the equivalent row scatter.
-    total = jnp.sum(bhist, axis=0)              # [n_out + 1]
-    starts = jnp.cumsum(total) - total          # exclusive bucket starts
-    blk_excl = jnp.cumsum(bhist, axis=0) - bhist  # [nb, n_out + 1]
-    block_of = jax.lax.iota(jnp.int32, Np) // bn
-    dest = starts[ids] + blk_excl[block_of, ids] + rank
+    N = data.shape[0]
+    dest, hist = bucket_dest_call(keys, bounds, n_valid, n_out=n_out,
+                                  block_n=block_n, interpret=interpret)
+    Np = dest.shape[0]
+    if Np != N:
+        data = jnp.pad(data, ((0, Np - N), (0, 0)))
     perm = jnp.zeros((Np,), jnp.int32).at[dest].set(
         jax.lax.iota(jnp.int32, Np), unique_indices=True)
     out = jnp.take(data, perm, axis=0)
-    return out[:N], total[:n_out]
+    return out[:N], hist

@@ -1,8 +1,8 @@
 """jit entry points for the bucket-partition kernels.
 
-Both wrappers pick interpret mode by backend (real lowering on TPU,
-interpret everywhere else) and choose a backend-appropriate block shape
-when the caller doesn't:
+Both wrappers pick interpret mode by backend (compiled lowering on real
+accelerators — TPU via Mosaic, GPU via Triton — interpret on CPU) and
+choose a backend-appropriate block shape when the caller doesn't:
 
 * **interpret (CPU CI)** — every grid step pays a Python interpreter
   pass, so the default is ONE block covering the whole batch; the
@@ -24,7 +24,8 @@ from functools import partial
 
 import jax
 
-from repro.kernels.bucket_partition.kernel import (bucket_partition_call,
+from repro.kernels.bucket_partition.kernel import (bucket_dest_call,
+                                                   bucket_partition_call,
                                                    bucket_scatter_call)
 
 # VMEM-conscious default block rows for real-accelerator lowering (see
@@ -32,8 +33,10 @@ from repro.kernels.bucket_partition.kernel import (bucket_partition_call,
 ACCEL_BLOCK_N = 2048
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _compiled_backend() -> bool:
+    """True when the default backend gets the compiled Pallas lowering
+    (TPU Mosaic, GPU Triton); CPU stays in interpret mode."""
+    return jax.default_backend() in ("tpu", "gpu")
 
 
 @partial(jax.jit, static_argnames=("n_buckets", "block_n", "interpret"))
@@ -44,7 +47,7 @@ def bucket_partition(keys, bounds, *, n_buckets: int, block_n: int = 2048,
     See :func:`bucket_partition_call` for the comparison contract.
     """
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = not _compiled_backend()
     return bucket_partition_call(keys, bounds, n_buckets=n_buckets,
                                  block_n=block_n, interpret=interpret)
 
@@ -62,9 +65,30 @@ def bucket_scatter(data, keys, bounds, n_valid, *, n_buckets: int,
     exist host-side; sync ``hist`` once to learn the bucket boundaries.
     """
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = not _compiled_backend()
     if block_n is None:
         block_n = data.shape[0] if interpret else ACCEL_BLOCK_N
     return bucket_scatter_call(data, keys, bounds, n_valid,
                                n_out=n_buckets, block_n=block_n,
                                interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("n_buckets", "block_n", "interpret"))
+def bucket_dest(keys, bounds, n_valid, *, n_buckets: int,
+                block_n: int | None = None,
+                interpret: bool | None = None):
+    """Scatter destinations without moving any data.
+
+    Returns ``(dest [Np] int32, hist [n_buckets] int32)`` — the stable
+    bucket-contiguous output position of every key row, padded rows
+    included (see :func:`bucket_dest_call`).  For callers that invert
+    the permutation and move rows themselves — on CPU a host-side numpy
+    inversion runs at memcpy speed where XLA's [Np] scatter crawls at
+    ~40ns/element, which is why the CPU shuffle path stops here.
+    """
+    if interpret is None:
+        interpret = not _compiled_backend()
+    if block_n is None:
+        block_n = keys.shape[0] if interpret else ACCEL_BLOCK_N
+    return bucket_dest_call(keys, bounds, n_valid, n_out=n_buckets,
+                            block_n=block_n, interpret=interpret)

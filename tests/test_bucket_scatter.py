@@ -20,12 +20,14 @@ the one compiled (non-interpret) case, auto-skipped off-TPU/GPU.
 import numpy as np
 import pytest
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.records import RecordBatch
 from repro.core.shuffle import (hash_partitioner, range_partitioner,
                                 reduce_partitioner, sample_boundaries,
-                                scatter_batch)
+                                scatter_batch, scatter_dispatch,
+                                scatter_pieces_dispatch)
 from repro.kernels.bucket_partition import bucket_scatter, bucket_scatter_ref
 
 try:
@@ -137,6 +139,155 @@ def test_scatter_degenerate_paths():
     assert [p.num_records for p in pieces[1:]] == [0, 0]
     # arbitrary Python partitioner: host-loop fallback, same contract
     _assert_scatter_parity(records, blob, 10, lambda r, n: r[0] % n, 3)
+
+
+def _padded_junk_batch(blob, rec, n, pad_rows, seed=0):
+    """A padding-resident batch: valid records up front, JUNK tail rows
+    that must never influence any result."""
+    rng = np.random.default_rng(seed)
+    junk = rng.integers(0, 256, size=(pad_rows - n, rec), dtype=np.uint8)
+    block = np.concatenate(
+        [np.frombuffer(blob, np.uint8).reshape(n, rec), junk])
+    return RecordBatch(jnp.asarray(block), n_valid=n)
+
+
+def test_scatter_padded_resident_input_parity():
+    """A padding-resident batch (dynamic n_valid, junk tail) scatters
+    identically to the exact batch of its valid records — on the kernel
+    path AND the host-loop fallback (which must slice, not leak junk)."""
+    n, rec, nb = 90, 12, 5
+    blob, records = _random_records(n, rec, seed=31)
+    for part in (range_partitioner(sample_boundaries(records, nb,
+                                                     key_bytes=10)),
+                 hash_partitioner(key_bytes=8),
+                 lambda r, k: r[0] % k):
+        for pad_rows in (96, 128, 256):
+            padded = _padded_junk_batch(blob, rec, n, pad_rows, seed=pad_rows)
+            pieces = scatter_batch(padded, part, nb, pad_block=PAD)
+            want = [[] for _ in range(nb)]
+            for r in records:
+                want[part(r, nb)].append(r)
+            for piece, wb in zip(pieces, want):
+                assert piece.to_bytes() == b"".join(wb)
+            assert sum(p.num_records for p in pieces) == n
+
+
+def test_scatter_dispatch_defers_the_histogram_sync():
+    """The dispatch half returns with the kernel merely enqueued — no
+    pieces yet — and harvest() with externally synced metadata (the
+    executor's one-barrier-per-round path) resolves the same pieces as
+    the self-syncing scatter_batch."""
+    nb = 4
+    blob, records = _random_records(120, 16, seed=5)
+    part = range_partitioner(sample_boundaries(records, nb, key_bytes=10))
+    batches = [RecordBatch.from_bytes(blob, 16) for _ in range(3)]
+    disps = [scatter_dispatch(b, part, nb, pad_block=PAD) for b in batches]
+    assert all(d.pending and d.pieces is None and d.host_syncs == 0
+               for d in disps)
+    synced = jax.device_get([d.sync_arrays for d in disps])  # ONE barrier
+    for d, s in zip(disps, synced):
+        pieces = d.harvest(synced=s)
+        assert not d.pending
+        ref = scatter_batch(RecordBatch.from_bytes(blob, 16), part, nb,
+                            pad_block=PAD)
+        assert [p.to_bytes() for p in pieces] == [p.to_bytes() for p in ref]
+
+
+def test_scatter_dispatch_degenerates_resolve_at_dispatch():
+    """Shapes with nothing to sync resolve into pieces immediately
+    (pending=False, host_syncs=0); the host-loop fallback resolves too
+    but reports the sync it already paid."""
+    blob, _ = _random_records(40, 8, seed=6)
+    batch = RecordBatch.from_bytes(blob, 8)
+    for disp in (scatter_dispatch(batch, hash_partitioner(4), 1),
+                 scatter_dispatch(RecordBatch.empty(8),
+                                  hash_partitioner(4), 4),
+                 scatter_dispatch(batch, reduce_partitioner(), 3)):
+        assert not disp.pending and disp.host_syncs == 0
+    host_loop = scatter_dispatch(batch, lambda r, n: r[0] % n, 3)
+    assert not host_loop.pending and host_loop.host_syncs == 1
+
+
+def _resident_pieces(rec, counts, rows, seed=0):
+    """Padding-resident pieces at one ladder shape + their valid records
+    in piece order (the executor's per-worker stage output shape)."""
+    pieces, records = [], []
+    for i, k in enumerate(counts):
+        blob, recs = _random_records(k, rec, seed=seed + 17 * i)
+        pieces.append(_padded_junk_batch(blob, rec, k, rows, seed=seed + i))
+        records.extend(recs)
+    return pieces, records
+
+
+def test_scatter_pieces_segmented_parity():
+    """Uniform resident pieces take the fused segmented path — no eager
+    concat, host-invert metadata pending — and harvest exactly the
+    buckets the bytes backend builds from the pieces' valid records in
+    piece order."""
+    rec, nb, rows = 16, 5, 96
+    pieces, records = _resident_pieces(rec, [60, 11, 90, 1], rows, seed=41)
+    part = range_partitioner(sample_boundaries(records, nb, key_bytes=10))
+    disp = scatter_pieces_dispatch(pieces, part, nb, pad_block=PAD,
+                                   interpret=True)
+    assert disp.pending and disp.host_syncs == 0
+    assert disp.src is not None and disp.dest is not None
+    out = disp.harvest()
+    want = [[] for _ in range(nb)]
+    for r in records:
+        want[part(r, nb)].append(r)
+    for piece, wb in zip(out, want):
+        assert piece.to_bytes() == b"".join(wb)
+    assert sum(p.num_records for p in out) == len(records)
+
+
+def test_scatter_pieces_ragged_and_single_fall_through():
+    """Ragged piece shapes concatenate and fall through to the per-batch
+    dispatch; a single piece delegates outright — identical buckets
+    either way."""
+    rec, nb = 16, 4
+    ragged, records = [], []
+    for i, (k, rows) in enumerate([(50, 64), (20, 96), (33, 48)]):
+        blob, recs = _random_records(k, rec, seed=91 + i)
+        ragged.append(_padded_junk_batch(blob, rec, k, rows, seed=i))
+        records.extend(recs)
+    part = range_partitioner(sample_boundaries(records, nb, key_bytes=10))
+    want = [[] for _ in range(nb)]
+    for r in records:
+        want[part(r, nb)].append(r)
+    out = scatter_pieces_dispatch(ragged, part, nb, pad_block=PAD,
+                                  interpret=True).harvest()
+    for piece, wb in zip(out, want):
+        assert piece.to_bytes() == b"".join(wb)
+    single = scatter_pieces_dispatch(ragged[:1], part, nb, pad_block=PAD,
+                                     interpret=True).harvest()
+    ref = scatter_batch(ragged[0], part, nb, pad_block=PAD, interpret=True)
+    assert [p.to_bytes() for p in single] == [p.to_bytes() for p in ref]
+
+
+def test_scatter_pieces_reduce_and_single_bucket_resolve_eagerly():
+    """Degenerate rounds through the pieces API still resolve at
+    dispatch with zero syncs (the host_syncs == shuffle_rounds
+    accounting counts only real barriers)."""
+    rec = 8
+    pieces, records = _resident_pieces(rec, [30, 10], 48, seed=3)
+    for part, n in ((reduce_partitioner(), 3), (hash_partitioner(4), 1)):
+        disp = scatter_pieces_dispatch(pieces, part, n, pad_block=PAD,
+                                       interpret=True)
+        assert not disp.pending and disp.host_syncs == 0
+        got = b"".join(p.to_bytes() for p in disp.harvest())
+        assert got == b"".join(records)
+
+
+@pytest.mark.requires_accelerator
+def test_scatter_batch_defaults_to_compiled_on_accelerator():
+    """With interpret unspecified, a GPU/TPU backend must take the
+    compiled Pallas lowering (Triton/Mosaic) — and still match bytes."""
+    from repro.kernels.bucket_partition.ops import _compiled_backend
+    assert _compiled_backend()
+    n, rec, nb = 3000, 16, 6
+    blob, records = _random_records(n, rec, seed=8)
+    part = range_partitioner(sample_boundaries(records, nb, key_bytes=10))
+    _assert_scatter_parity(records, blob, rec, part, nb)
 
 
 def _lexsorted_rows(rows: np.ndarray) -> np.ndarray:

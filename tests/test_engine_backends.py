@@ -242,6 +242,121 @@ def test_chained_reduce_tiny_batch_backend_parity(tmp_path, monkeypatch):
     assert results["array"][1].udf_traces["fold"] == 1
 
 
+def _terasort_job(backend, data, n_buckets=4):
+    sample = [data[i:i + REC] for i in range(0, min(len(data), 100 * REC),
+                                             REC)]
+    bounds = sample_boundaries(sample, n_buckets, key_bytes=10)
+    return SphereJob("sort", "f", terasort_stages(bounds, backend,
+                                                  n_buckets),
+                     record_size=REC, backend=backend)
+
+
+def test_host_syncs_one_per_shuffle_round(tmp_path):
+    """The dispatch-then-sync invariant: an array kernel-path shuffle
+    round costs exactly ONE host sync (the batched histogram barrier),
+    never one per worker batch — and the bytes backend, which never puts
+    data on device, reports zero while agreeing on the round count."""
+    for backend, sub in (("bytes", "b"), ("array", "a")):
+        d = tmp_path / sub
+        d.mkdir()
+        master, servers, client = make_cloud(d, chunk_size=1000)
+        data = _upload(client, "f", n=200, replication=2)
+        _, rep = SphereEngine(master, client).run(
+            _terasort_job(backend, data))
+        assert rep.shuffle_rounds == 1       # one non-final stage
+        if backend == "array":
+            assert rep.host_syncs == rep.shuffle_rounds
+        else:
+            assert rep.host_syncs == 0
+
+
+def test_host_syncs_reduce_round_is_free(tmp_path):
+    """Reduce rounds resolve at dispatch (single-bucket short circuit):
+    the round counts in shuffle_rounds but syncs nothing — host_syncs
+    stays <= shuffle_rounds in general, equal only on kernel rounds."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    rng = np.random.default_rng(11)
+    client.upload("f", rng.integers(0, 1000, size=(40, 2)).astype("<f4")
+                  .tobytes(), replication=2)
+    emit, fold = _reduce_jobs("array")
+    sess = SphereEngine(master, client).session("f", record_size=8,
+                                                backend="array")
+    _, rep = sess.run(emit)
+    assert rep.shuffle_rounds == 1 and rep.host_syncs == 0
+    _, rep2 = sess.run(fold, input="chained")
+    assert rep2.host_syncs == 0
+
+
+def test_host_syncs_chained_terasort_rounds(tmp_path):
+    """A chained session re-running the sort keeps the one-sync-per-round
+    invariant on every job in the chain."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    data = _upload(client, "f", n=150, replication=2)
+    sess = SphereEngine(master, client).session("f", record_size=REC,
+                                                backend="array")
+    job = _terasort_job("array", data)
+    _, rep1 = sess.run(job)
+    _, rep2 = sess.run(job, input="chained")
+    for rep in (rep1, rep2):
+        assert rep.shuffle_rounds == 1
+        assert rep.host_syncs == rep.shuffle_rounds
+
+
+@pytest.mark.parametrize("backend", ["bytes", "array"])
+def test_prefetch_matches_synchronous_path(tmp_path, backend):
+    """Stage-0 decode prefetch is result-identical: same outputs, same
+    report (including retry counters) as prefetch=False — with a dead
+    server in the mix so the failure-replay path is exercised."""
+    results = {}
+    for prefetch in (True, False):
+        sub = tmp_path / f"{backend}-{prefetch}"
+        sub.mkdir()
+        master, servers, client = make_cloud(sub, chunk_size=1000)
+        data = _upload(client, "f", n=120, replication=3)
+        servers[2].kill()
+        master.deregister(servers[2].server_id)
+        eng = SphereEngine(master, client, prefetch=prefetch)
+        outs, rep = eng.run(_terasort_job(backend, data))
+        results[prefetch] = (outs, rep)
+    assert results[True][0] == results[False][0]
+    assert _report_key(results[True][1]) == _report_key(results[False][1])
+    assert results[True][1].retried == results[False][1].retried
+
+
+def test_stream_windows_backend_parity_with_overlap(tmp_path):
+    """Two sliding windows of a TeraSort stream: byte-identical window
+    outputs across backends under the dispatch-then-sync shuffle and
+    prefetch, with the one-sync-per-round invariant holding per window
+    on the array side."""
+    from repro.core import WindowPolicy
+
+    outs = {}
+    for backend in ("bytes", "array"):
+        sub = tmp_path / backend
+        sub.mkdir()
+        master, servers, client = make_cloud(sub, chunk_size=1000)
+        eng = SphereEngine(master, client)
+        stream = eng.stream("s/", window=WindowPolicy.sliding(2),
+                            record_size=REC, backend=backend)
+        datas = [_upload(client, f"s/{i}", n=60, seed=i, replication=2)
+                 for i in range(3)]
+        sample = [datas[0][i:i + REC] for i in range(0, 60 * REC, REC)]
+        bounds = sample_boundaries(sample, 4, key_bytes=10)
+        job = SphereJob("sort", "s/", terasort_stages(bounds, backend, 4),
+                        record_size=REC, backend=backend)
+        # 3 arrivals under sliding(2): the trailing window (s/1, s/2) is
+        # current — run the job against it
+        assert stream.windows_formed == 2
+        o, rep = stream.run(job)
+        outs[backend] = [(o, rep)]
+        if backend == "array":
+            assert rep.shuffle_rounds == 1
+            assert rep.host_syncs == rep.shuffle_rounds
+    assert outs["bytes"][0][0] == outs["array"][0][0]
+    assert (_report_key(outs["bytes"][0][1])
+            == _report_key(outs["array"][0][1]))
+
+
 def test_pad_unstable_udf_is_rejected(tmp_path):
     """A batch_udf that changes the row count while declaring pad_value
     violates the pad-stability contract and must fail loudly."""

@@ -232,6 +232,67 @@ def test_record_batch_roundtrip():
         RecordBatch.from_records([b"ab", b"abc"])
 
 
+def test_concat_single_nonempty_fast_path():
+    """concat of one non-empty batch returns the batch ITSELF (no copy) —
+    including a padding-resident batch, which must stay resident —
+    while empties are dropped and multi-input concat materialises only
+    the valid prefixes."""
+    blob, records = _random_records(10, 8, seed=21)
+    exact = RecordBatch.from_bytes(blob, 8)
+    empty = RecordBatch.empty(8)
+    assert RecordBatch.concat([exact]) is exact
+    assert RecordBatch.concat([empty, exact, empty]) is exact
+
+    junk = np.full((6, 8), 0xAB, np.uint8)
+    block = np.concatenate([np.frombuffer(blob, np.uint8).reshape(10, 8),
+                            junk])
+    padded = RecordBatch(jnp.asarray(block), n_valid=10)
+    assert RecordBatch.concat([padded]) is padded       # stays resident
+    assert RecordBatch.concat([empty, padded]) is padded
+    assert RecordBatch.concat([padded]).padded_rows == 16
+
+    both = RecordBatch.concat([padded, exact])          # junk excluded
+    assert both.n_valid is None
+    assert both.to_bytes() == blob + blob
+    assert RecordBatch.concat([empty, empty]).num_records == 0
+
+
+def test_padded_batch_roundtrip():
+    """Padding-resident accessors: valid-prefix codecs, nbytes = valid
+    bytes (planner pricing parity), block() reuse/slice/grow, compact,
+    and the validation envelope."""
+    blob, records = _random_records(12, 8, seed=22)
+    junk = np.full((4, 8), 0xEE, np.uint8)
+    block = np.concatenate([np.frombuffer(blob, np.uint8).reshape(12, 8),
+                            junk])
+    b = RecordBatch(jnp.asarray(block), n_valid=12)
+    assert b.num_records == 12 and b.padded_rows == 16
+    assert b.nbytes == 12 * 8                  # padding is free
+    assert b.to_bytes() == blob                # junk never materialises
+    assert b.to_records() == records
+    assert np.asarray(b.valid_data).tobytes() == blob
+    c = b.compact()
+    assert c.n_valid is None and c.to_bytes() == blob
+    # block(): same shape reuses the resident array, larger prefix-slices
+    # a bigger resident block, smaller-than-resident slices the prefix
+    assert b.block(16) is b.data
+    assert b.block(32).shape == (32, 8)
+    assert bytes(np.asarray(b.block(32))[:12].tobytes()) == blob
+    assert b.block(12).shape == (12, 8)
+    with pytest.raises(ValueError):
+        b.block(11)                            # can't fit 12 valid rows
+    # n_valid == rows normalises to an exact batch; out-of-range rejects
+    full = RecordBatch(jnp.asarray(block), n_valid=16)
+    assert full.n_valid is None
+    with pytest.raises(ValueError):
+        RecordBatch(jnp.asarray(block), n_valid=17)
+    with pytest.raises(ValueError):
+        RecordBatch(jnp.asarray(block), n_valid=-1)
+    # sort_by_key on a padding-resident batch sorts only valid records
+    got = b.sort_by_key(8).to_records()
+    assert got == sorted(records)
+
+
 def test_points_roundtrip():
     pts = np.random.default_rng(19).normal(size=(40, 6)).astype(np.float32)
     batch = RecordBatch.from_points(jnp.asarray(pts))
