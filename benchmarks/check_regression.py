@@ -7,11 +7,17 @@
 Compares watched throughput metrics from a ``--smoke`` benchmark run's
 ``BENCH_*.json`` files against the committed baseline and exits non-zero
 when any metric regressed by more than ``--tolerance`` (default 30%).
-Higher-is-better metrics only; improvements always pass (and are the cue
-to refresh the baseline with ``--write-baseline``).
+Improvements always pass (and are the cue to refresh the baseline with
+``--write-baseline``).
 
-Ratio metrics (speedups) are machine-independent; absolute throughputs
-wobble more across runners, which the default tolerance absorbs.
+Each ``WATCHED`` entry carries a metric kind: ``abs`` (absolute
+throughput, higher is better), ``ratio`` (machine-independent speedup,
+higher is better), or ``max`` (cost bound, **lower** is better — the
+fresh value fails when it exceeds baseline by more than tolerance).
+Ratio metrics are machine-independent; absolute throughputs wobble more
+across runners, which the default tolerance absorbs; ``max`` metrics
+like ``dispatches_per_round`` are structural counts that barely wobble
+at all.
 """
 from __future__ import annotations
 
@@ -20,7 +26,8 @@ import json
 import os
 import sys
 
-# (file, path-into-json, metric kind) — all higher-is-better
+# (file, path-into-json, metric kind); kinds "abs"/"ratio" are
+# higher-is-better, "max" is lower-is-better (a gated cost bound)
 WATCHED = [
     ("BENCH_table3_terasort.json",
      ("result", "partition", "array_rec_per_s"), "abs"),
@@ -36,6 +43,14 @@ WATCHED = [
     # (~0.17 on the 6-site cloud), far past any tolerance
     ("BENCH_table3_terasort.json",
      ("result", "host", "sphere_array", "rounds_per_sync"), "ratio"),
+    # fused worker-axis rounds: compiled dispatches per shuffle round on
+    # the array engine path.  The fused round costs a small constant
+    # (stacked apply + bounded scatter shards + harvest gather); a fall
+    # back to the per-worker dispatch loop multiplies it by
+    # O(tasks + workers) per round, far past any tolerance.  Lower is
+    # better — baseline pinned at the high end of healthy variance.
+    ("BENCH_table3_terasort.json",
+     ("result", "host", "sphere_array", "dispatches_per_round"), "max"),
     # engine-level scale sweep, flagship (largest) scale: the warm
     # device-resident scatter through the whole engine must stay ahead
     # of the bytes backend (ratio) and keep its absolute throughput
@@ -127,7 +142,7 @@ def main(argv=None) -> int:
         baseline = json.load(f)
 
     failed = []
-    for fname, path, _ in WATCHED:
+    for fname, path, kind in WATCHED:
         mid = _metric_id(fname, path)
         base, cur = baseline.get(mid), current.get(mid)
         if base is None:
@@ -138,11 +153,17 @@ def main(argv=None) -> int:
             print(f"FAIL   {mid}: missing from current run "
                   f"(baseline {base})")
             continue
-        floor = base * (1.0 - args.tolerance)
-        status = "ok" if cur >= floor else "FAIL"
-        print(f"{status:6} {mid}: {cur} vs baseline {base} "
-              f"(floor {floor:.0f})")
-        if cur < floor:
+        if kind == "max":  # lower is better: fail above the ceiling
+            bound = base * (1.0 + args.tolerance)
+            bad = cur > bound
+            print(f"{'FAIL' if bad else 'ok':6} {mid}: {cur} vs baseline "
+                  f"{base} (ceiling {bound:.1f}, lower is better)")
+        else:              # abs/ratio: fail below the floor
+            bound = base * (1.0 - args.tolerance)
+            bad = cur < bound
+            print(f"{'FAIL' if bad else 'ok':6} {mid}: {cur} vs baseline "
+                  f"{base} (floor {bound:.0f})")
+        if bad:
             failed.append(mid)
     if failed:
         print(f"\nregression gate FAILED: {', '.join(failed)}")

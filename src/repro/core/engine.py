@@ -69,21 +69,30 @@ class SphereEngine:
                  speeds: Optional[Dict[str, float]] = None,
                  speculate_factor: float = 1.8, max_retries: int = 3,
                  pad_block: int = 4096, prefetch: bool = True,
-                 timing_sync: bool = False):
+                 prefetch_depth: int = 1, timing_sync: bool = False,
+                 fused_rounds: bool = True, mesh=None):
         self.master = master
         self.client = client
         self.speeds = speeds or {}
         self.speculate_factor = speculate_factor
         self.max_retries = max_retries
         self.pad_block = pad_block
-        # prefetch: overlap stage-0 chunk fetch+decode of task i+1 with
-        # the dispatch of task i (one-deep, result-identical — off only
-        # for A/B tests and debugging).  timing_sync: block on shuffled
-        # pieces before stopping the partition_seconds clock — the
-        # benchmark-honesty knob; leave off in production, where eager
-        # timers would serialise the async data plane they measure.
+        # prefetch: overlap stage-0 chunk fetch+decode of the next
+        # ``prefetch_depth`` tasks with the dispatch of task i
+        # (result-identical at any depth — off only for A/B tests and
+        # debugging).  timing_sync: block on shuffled pieces before
+        # stopping the partition_seconds clock — the benchmark-honesty
+        # knob; leave off in production, where eager timers would
+        # serialise the async data plane they measure.
         self.prefetch = prefetch
+        self.prefetch_depth = prefetch_depth
         self.timing_sync = timing_sync
+        # fused_rounds: run each array-backend round (UDF applies +
+        # scatter + regrouping) over a stacked worker axis in O(1)
+        # compiled dispatches; with ``mesh`` the stacked round lowers
+        # through shard_map with an all_to_all exchange (spmd module).
+        self.fused_rounds = fused_rounds
+        self.mesh = mesh
 
     # ------------------------------------------------------------- helpers
     def _workers(self) -> List[str]:

@@ -25,17 +25,23 @@ workers and simulated time agrees across backends for the same job.
 """
 from __future__ import annotations
 
+import queue
 import threading
 import time
+from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.job import SphereJob, SphereStage
 from repro.core.planner import SphereReport, StagePlan
-from repro.core.records import RecordBatch
-from repro.core.shuffle import _quarter_rows, scatter_pieces_dispatch
+from repro.core.records import RecordBatch, StackedBatch
+from repro.core.shuffle import (FusedRoundResult, _quarter_rows,
+                                scatter_pieces_dispatch,
+                                scatter_round_dispatch)
 from repro.sector.server import ServerDown
 
 # per-bucket origin accounting: origins[i][worker] = bytes of bucket i
@@ -45,11 +51,13 @@ Origins = List[Dict[str, int]]
 
 class _ExecutorBase:
     def __init__(self, client, workers: Sequence[str], max_retries: int = 3,
-                 cache_chunks: bool = False, prefetch: bool = True):
+                 cache_chunks: bool = False, prefetch: bool = True,
+                 prefetch_depth: int = 1):
         self.client = client
         self.workers = list(workers)
         self.max_retries = max_retries
         self.prefetch = prefetch
+        self.prefetch_depth = max(1, prefetch_depth)
         # session mode: stage-0 chunks, once fetched and decoded, stay
         # resident (bytes: record lists; array: device RecordBatches) so
         # a chain of jobs over the same file pays the host round-trip
@@ -95,69 +103,58 @@ class _ExecutorBase:
         return decoded
 
     # ------------------------------------------------- stage-0 prefetch
-    def _prefetch_start(self, job: SphereJob, key: str):
-        """Kick off fetch+decode of one chunk on a worker thread (None on
-        a chunk-cache hit).  The thread makes ONE bare ``read_chunk``
-        attempt — retry accounting and repair stay on the main thread so
-        reports are bit-identical with prefetching off."""
-        if self._chunk_cache is not None and key in self._chunk_cache:
-            return None
-        box: Dict[str, object] = {}
-
-        def work():
-            try:
-                box["decoded"] = self._decode_chunk(
-                    job, self.client.read_chunk(key))
-            except BaseException as err:  # noqa: BLE001 — re-raised below
-                box["error"] = err
-
-        t = threading.Thread(target=work, daemon=True,
-                             name=f"sphere-prefetch-{key}")
-        t.start()
-        return t, box
-
-    def _prefetch_finish(self, job: SphereJob, key: str, handle,
-                         rep: SphereReport):
-        """Join a prefetch.  A failed read replays the chunk through the
-        main-thread retry loop (:meth:`_stage0_input`) from attempt one,
-        so ``rep.retried`` and repair behaviour match the synchronous
-        path exactly; unexpected errors propagate."""
-        if handle is None:  # cache hit at start time
-            return self._stage0_input(job, key, rep)
-        thread, box = handle
-        thread.join()
-        if "error" in box:
-            if isinstance(box["error"], (IOError, ServerDown)):
-                return self._stage0_input(job, key, rep)
-            raise box["error"]
-        decoded = box["decoded"]
-        if self._chunk_cache is not None:
-            self._chunk_cache[key] = decoded
-        return decoded
-
     def _stage0_batches(self, job: SphereJob, tasks, rep: SphereReport
                         ) -> Iterator[tuple]:
         """Yield ``(task, decoded_input)`` for the stage-0 task list with
-        a one-deep decode prefetch: while the caller runs (dispatches)
-        task i, a worker thread fetches and decodes chunk i+1, so host
-        I/O overlaps device compute.  Reads stay strictly sequential —
-        the next fetch starts only after the previous one finished — so
-        Sector client state (transfer log, cache warmth) evolves exactly
-        as in the synchronous loop.  ``decoded_input`` is None when every
-        replica of a chunk is gone (the caller skips the task)."""
-        if not self.prefetch:
+        a ``prefetch_depth``-deep fetch+decode pipeline: ONE producer
+        thread walks the chunks strictly in task order — so Sector
+        client state (transfer log, cache warmth) evolves exactly as in
+        the synchronous loop — pushing decoded inputs into a bounded
+        queue the caller drains, so host I/O of up to ``prefetch_depth``
+        chunks overlaps device compute.  The producer makes one bare
+        ``read_chunk`` attempt per chunk; a failed read is replayed on
+        the MAIN thread through :meth:`_stage0_input`'s retry loop from
+        attempt one, so ``rep.retried`` and repair behaviour are
+        bit-identical with prefetching off (and across depths).
+        ``decoded_input`` is None when every replica of a chunk is gone
+        (the caller skips the task)."""
+        if not self.prefetch or len(tasks) <= 1:
             for t in tasks:
                 yield t, self._stage0_input(job, t.key, rep)
             return
-        pending = None
-        for i, t in enumerate(tasks):
-            if pending is None:
-                cur = self._stage0_input(job, t.key, rep)
+        q: "queue.Queue[tuple]" = queue.Queue(maxsize=self.prefetch_depth)
+
+        def produce():
+            for t in tasks:
+                if self._chunk_cache is not None \
+                        and t.key in self._chunk_cache:
+                    # cache hits are resolved by the consumer (the cache
+                    # may gain entries while this thread runs ahead)
+                    q.put(("cache", None))
+                    continue
+                try:
+                    q.put(("ok", self._decode_chunk(
+                        job, self.client.read_chunk(t.key))))
+                except (IOError, ServerDown):
+                    q.put(("retry", None))
+                except BaseException as err:  # noqa: BLE001 — re-raised
+                    q.put(("error", err))
+                    return
+
+        th = threading.Thread(target=produce, daemon=True,
+                              name="sphere-prefetch")
+        th.start()
+        for t in tasks:
+            kind, payload = q.get()
+            if kind == "ok":
+                if self._chunk_cache is not None:
+                    self._chunk_cache[t.key] = payload
+                yield t, payload
+            elif kind in ("cache", "retry"):
+                yield t, self._stage0_input(job, t.key, rep)
             else:
-                cur = self._prefetch_finish(job, t.key, pending, rep)
-            pending = (self._prefetch_start(job, tasks[i + 1].key)
-                       if i + 1 < len(tasks) else None)
-            yield t, cur
+                raise payload
+        th.join()
 
 
 class BytesExecutor(_ExecutorBase):
@@ -241,13 +238,21 @@ class _TracedUDF:
     centroids in ``params``) — shares one trace."""
 
     def __init__(self, name: str, udf, *, masked: bool = False,
-                 pad_value: int = 0):
+                 pad_value: int = 0, mesh=None):
         self.name = name
         self.udf = udf
         self.pad_value = pad_value
+        self.mesh = mesh
         self.traces = 0
         self._jit = jax.jit(self._call_masked if masked else
                             self._call_padded)
+        # fused-round entry points: the whole stage as ONE vmapped call
+        # over the stacked slot axis (``target`` static so one trace
+        # serves every round at the stage's block shape)
+        self._jit_stacked = jax.jit(self._call_stacked,
+                                    static_argnames=("target",))
+        self._jit_stack_pieces = jax.jit(self._call_stack_pieces,
+                                         static_argnames=("target",))
 
     def _check(self, out) -> jax.Array:
         if not isinstance(out, RecordBatch):
@@ -274,19 +279,151 @@ class _TracedUDF:
         mask, norm = self._normalize(data, n_valid)
         return self._check(self.udf(RecordBatch(norm), mask, params))
 
+    def _vmapped(self, data3: jax.Array, n_valids: jax.Array) -> jax.Array:
+        """The per-slot body vmapped over the slot axis — and, when a
+        mesh was supplied, lowered through ``shard_map`` over the
+        ``data`` axis so each device runs only its resident slots."""
+        fn = jax.vmap(self._call_padded)
+        if self.mesh is not None:
+            from repro.core.spmd import sphere_map
+            fn = sphere_map(fn, self.mesh)
+        return fn(data3, n_valids)
+
+    def _call_stacked(self, data3: jax.Array, n_valids: jax.Array, *,
+                      target: int) -> jax.Array:
+        """Stacked [s, rows, width] input (a previous fused round's
+        resident partitions); rows are adjusted to ``target`` in-jit —
+        slicing off junk tail or growing it — before the vmapped body."""
+        rows = data3.shape[1]
+        if rows > target:
+            data3 = data3[:, :target, :]
+        elif rows < target:
+            data3 = jnp.pad(data3, ((0, 0), (0, target - rows), (0, 0)))
+        return self._vmapped(data3, n_valids)
+
+    def _call_stack_pieces(self, pieces, n_valids: jax.Array, *,
+                           target: int) -> jax.Array:
+        """Tuple of per-task 2-D pieces (stage-0 decoded chunks) stacked
+        INSIDE the trace: each piece pads/slices to ``target`` rows, one
+        fused concatenate+reshape forms the [s, target, width] block —
+        no eager per-piece dispatch, mirroring _scatter_dest_segments'
+        in-jit stack rationale."""
+        width = pieces[0].shape[1]
+        blocks = []
+        for p in pieces:
+            r = p.shape[0]
+            if r > target:
+                p = p[:target]
+            elif r < target:
+                p = jnp.pad(p, ((0, target - r), (0, 0)))
+            blocks.append(p)
+        data3 = jnp.concatenate(blocks, axis=0) \
+            .reshape(len(pieces), target, width)
+        return self._vmapped(data3, n_valids)
+
+    def stacked(self, data3: jax.Array, n_valids, target: int) -> jax.Array:
+        return self._jit_stacked(data3, n_valids, target=target)
+
+    def stack_pieces(self, pieces, n_valids, target: int) -> jax.Array:
+        return self._jit_stack_pieces(tuple(pieces), n_valids,
+                                      target=target)
+
     def __call__(self, *args) -> jax.Array:
         return self._jit(*args)
 
 
+class _SlotRef:
+    """One worker's partition as a VIEW into a round-stacked array.
+
+    A fused round leaves every destination worker's records inside one
+    [n_workers, block, width] device array (:class:`FusedRoundResult`);
+    installing per-worker ``RecordBatch`` copies would undo the fusion
+    with n_workers slice dispatches.  A ``_SlotRef`` instead records
+    (stacked, slot index) and answers the host-side shape queries
+    (``num_records``/``nbytes`` from the host count vector, no device
+    op); :meth:`batch` materialises the slot as a padding-resident
+    RecordBatch only when a non-fused consumer actually needs one.
+    """
+
+    __slots__ = ("stacked", "idx")
+
+    def __init__(self, stacked: StackedBatch, idx: int):
+        self.stacked = stacked
+        self.idx = idx
+
+    @property
+    def num_records(self) -> int:
+        return int(self.stacked.n_valid[self.idx])
+
+    @property
+    def record_size(self) -> int:
+        return self.stacked.record_size
+
+    @property
+    def nbytes(self) -> int:
+        return self.num_records * self.record_size
+
+    def batch(self) -> RecordBatch:
+        return self.stacked.slot(self.idx)
+
+
+def _as_batch(part) -> Optional[RecordBatch]:
+    """A parts-dict value as a RecordBatch (None stays None) — the
+    read-side adapter every non-fused consumer goes through."""
+    return part.batch() if isinstance(part, _SlotRef) else part
+
+
+@dataclass
+class _StackedOut:
+    """A fused run_stage result: the whole stage output as ONE
+    StackedBatch, plus each slot's origin worker (index into the
+    executor's worker ring).  Slots are ordered worker-major (ascending
+    worker order, plan order within a worker), which is exactly the
+    iteration order of the per-worker dict path — so fused and
+    per-worker rounds see records in the same global order."""
+
+    stacked: StackedBatch
+    slot_workers: np.ndarray
+
+    def to_worker_dict(self, workers: Sequence[str]
+                       ) -> Dict[str, List[RecordBatch]]:
+        """Downgrade to the legacy per-worker pieces dict (used when the
+        following shuffle cannot stay on the fused kernel path)."""
+        out: Dict[str, List[RecordBatch]] = {w: [] for w in workers}
+        for i in range(self.stacked.n_slots):
+            if self.stacked.n_valid[i]:
+                out[workers[int(self.slot_workers[i])]].append(
+                    self.stacked.slot(i))
+        return out
+
+
 class ArrayExecutor(_ExecutorBase):
-    """Device-resident data plane: one RecordBatch per worker partition."""
+    """Device-resident data plane: one RecordBatch per worker partition.
+
+    With ``fused_rounds`` (the default), pad-stable stages run the whole
+    round — every task's UDF apply, every worker's bucket scatter, and
+    the regrouping onto destination workers — through O(1) compiled
+    dispatches over a stacked slot axis instead of a Python loop of
+    per-task/per-worker calls (see :class:`_StackedOut`,
+    :func:`scatter_round_dispatch` and :class:`FusedRoundResult`).
+    Mask-aware, shape-polymorphic and host-loop shapes keep the
+    per-task path.  Supplying ``mesh`` lowers the fused round through
+    ``shard_map`` over the mesh's ``data`` axis with the bucket exchange
+    as ``lax.all_to_all`` (``core.spmd.fused_scatter_round``)."""
 
     def __init__(self, client, workers: Sequence[str], max_retries: int = 3,
                  pad_block: int = 4096, cache_chunks: bool = False,
-                 prefetch: bool = True, timing_sync: bool = False):
+                 prefetch: bool = True, timing_sync: bool = False,
+                 fused_rounds: bool = True, mesh=None,
+                 prefetch_depth: int = 1):
         super().__init__(client, workers, max_retries,
-                         cache_chunks=cache_chunks, prefetch=prefetch)
+                         cache_chunks=cache_chunks, prefetch=prefetch,
+                         prefetch_depth=prefetch_depth)
         self.pad_block = pad_block
+        self.fused_rounds = fused_rounds
+        # the mesh only carries rounds whose slot/worker counts divide
+        # its data axis; others silently use the single-device lowering
+        self.mesh = mesh
         # benchmark honesty knob: block on every shuffled piece before
         # stopping the partition_seconds clock, so deferred-sync timing
         # can never report still-in-flight device work as finished.
@@ -316,9 +453,10 @@ class ArrayExecutor(_ExecutorBase):
         # the same address, nor does trace state accumulate unboundedly
         traced = getattr(stage, "_traced", None)
         if traced is None or traced.udf is not udf \
-                or traced.pad_value != pad_value:
+                or traced.pad_value != pad_value \
+                or traced.mesh is not self.mesh:
             traced = _TracedUDF(stage.name, udf, masked=masked,
-                                pad_value=pad_value)
+                                pad_value=pad_value, mesh=self.mesh)
             stage._traced = traced
         return traced
 
@@ -338,6 +476,7 @@ class ArrayExecutor(_ExecutorBase):
         slice off."""
         traced = self._traced_for(stage, stage.masked_udf, masked=True)
         out = traced(batch.block(target), batch.num_records, stage.params)
+        rep.device_dispatches += 1
         self._note_traces(stage, traced, rep)
         return RecordBatch(out)
 
@@ -351,6 +490,7 @@ class ArrayExecutor(_ExecutorBase):
         traced = self._traced_for(stage, stage.batch_udf)
         n = batch.num_records
         out = traced(batch.block(target), n)
+        rep.device_dispatches += 1
         self._note_traces(stage, traced, rep)
         if out.shape[0] != target:
             raise ValueError(
@@ -385,8 +525,7 @@ class ArrayExecutor(_ExecutorBase):
         return _quarter_rows(max_rows, self.pad_block)
 
     def run_stage(self, job: SphereJob, stage: SphereStage, plan: StagePlan,
-                  parts, rep: SphereReport, *, first_stage: bool
-                  ) -> Dict[str, List[RecordBatch]]:
+                  parts, rep: SphereReport, *, first_stage: bool):
         masked = stage.masked_udf is not None
         pad_stable = (stage.batch_udf is not None
                       and stage.pad_value is not None)
@@ -394,11 +533,16 @@ class ArrayExecutor(_ExecutorBase):
         # UDF traces exactly once per stage
         target = (self._stage_block_shape(job, plan, parts, first_stage)
                   if masked or pad_stable else 0)
+        if self.fused_rounds and pad_stable and target and plan.tasks:
+            fused = self._run_stage_fused(job, stage, plan, parts, rep,
+                                          first_stage, target)
+            if fused is not None:
+                return fused
         out: Dict[str, List[RecordBatch]] = {w: [] for w in self.workers}
         if first_stage:
             source = self._stage0_batches(job, plan.tasks, rep)
         else:
-            source = ((t, parts.get(t.key)) for t in plan.tasks)
+            source = ((t, _as_batch(parts.get(t.key))) for t in plan.tasks)
         for t, batch in source:
             if batch is None or not batch.num_records:
                 continue
@@ -418,9 +562,189 @@ class ArrayExecutor(_ExecutorBase):
                 # (shape-polymorphic UDFs see exact batches, never junk
                 # padding rows)
                 out[t.executor].append(stage.apply_batch(batch.compact()))
+                rep.device_dispatches += 1
         return out
 
+    def _check_stacked(self, stage: SphereStage, out, s: int, target: int
+                       ) -> None:
+        if out.ndim != 3 or out.shape[0] != s or out.shape[1] != target:
+            raise ValueError(
+                f"stage {stage.name!r} declares pad_value but its batch_udf "
+                f"changed the row count ({target} -> {out.shape[1]}); "
+                f"pad-stable UDFs must map padding rows to tail padding")
+
+    def _mesh_slots(self, n: int) -> int:
+        """Slot count padded up to a multiple of the mesh data axis (the
+        shard_map sharding requirement); extra slots ride through with
+        zero valid rows.  1 when no mesh is bound."""
+        if self.mesh is None:
+            return n
+        d = self.mesh.shape.get("data", 1)
+        return -(-n // d) * d
+
+    def _aligned_stacked(self, parts) -> Optional[StackedBatch]:
+        """The previous fused round's StackedBatch, when every worker's
+        resident part is exactly its slot of ONE stack (the steady state
+        of chained fused rounds) — lets the next stage consume the stack
+        directly with zero per-worker slicing."""
+        base: Optional[StackedBatch] = None
+        for i, w in enumerate(self.workers):
+            p = parts.get(w)
+            if p is None:
+                continue
+            if not isinstance(p, _SlotRef) or p.idx != i:
+                return None
+            if base is None:
+                base = p.stacked
+            elif p.stacked is not base:
+                return None
+        if base is None or base.n_slots != len(self.workers):
+            return None
+        # empty workers hold None — consistent only if their slot counts
+        # are zero (place_buckets guarantees this)
+        return base
+
+    def _run_stage_fused(self, job: SphereJob, stage: SphereStage,
+                         plan: StagePlan, parts, rep: SphereReport,
+                         first_stage: bool, target: int):
+        """The whole stage as ONE vmapped UDF dispatch over a stacked
+        slot axis.  Slots collect worker-major (ascending executor
+        order, plan order within a worker — the per-worker dict path's
+        iteration order, so record order is preserved exactly).
+        Returns None when the stage must take the per-task path (a
+        task placed on an unknown worker)."""
+        windex = {w: i for i, w in enumerate(self.workers)}
+        if any(t.executor not in windex for t in plan.tasks):
+            return None
+        traced = self._traced_for(stage, stage.batch_udf)
+        if not first_stage:
+            stacked = self._aligned_stacked(parts)
+            if stacked is not None \
+                    and stacked.n_slots == self._mesh_slots(stacked.n_slots):
+                # steady state: the resident stack IS the stage input
+                out = traced.stacked(
+                    stacked.data, jnp.asarray(stacked.n_valid, jnp.int32),
+                    target)
+                rep.device_dispatches += 1
+                self._note_traces(stage, traced, rep)
+                self._check_stacked(stage, out, stacked.n_slots, target)
+                return _StackedOut(
+                    StackedBatch(out, stacked.n_valid),
+                    np.arange(stacked.n_slots, dtype=np.int64))
+        items: List[Tuple[int, RecordBatch]] = []
+        if first_stage:
+            for t, batch in self._stage0_batches(job, plan.tasks, rep):
+                if batch is not None and batch.num_records:
+                    items.append((windex[t.executor], batch))
+        else:
+            for t in plan.tasks:
+                batch = _as_batch(parts.get(t.key))
+                if batch is not None and batch.num_records:
+                    items.append((windex[t.executor], batch))
+        if not items:
+            # nothing to run — return the legacy-shaped empty dict
+            # directly (falling back to the per-task loop would replay
+            # the stage-0 fetches, double-counting retries)
+            return {w: [] for w in self.workers}
+        items.sort(key=lambda p: p[0])          # stable: worker-major
+        n_valid = np.fromiter((b.num_records for _, b in items), np.int32,
+                              count=len(items))
+        slot_workers = np.fromiter((i for i, _ in items), np.int64,
+                                   count=len(items))
+        pieces = [b.data for _, b in items]
+        pad_slots = self._mesh_slots(len(items)) - len(items)
+        if pad_slots:
+            zero = jnp.zeros((target, items[0][1].record_size), jnp.uint8)
+            pieces.extend([zero] * pad_slots)
+            n_valid = np.concatenate([n_valid,
+                                      np.zeros(pad_slots, np.int32)])
+            slot_workers = np.concatenate(
+                [slot_workers, np.zeros(pad_slots, np.int64)])
+        out = traced.stack_pieces(pieces, jnp.asarray(n_valid, jnp.int32),
+                                  target)
+        rep.device_dispatches += 1
+        self._note_traces(stage, traced, rep)
+        self._check_stacked(stage, out, len(pieces), target)
+        return _StackedOut(StackedBatch(out, n_valid), slot_workers)
+
     # ----------------------------------------------------------- shuffle
+    def _bucketize_mesh(self, stage: SphereStage, out: _StackedOut, n: int,
+                        rep: SphereReport):
+        """The fused round through ``shard_map`` + ``all_to_all`` (see
+        ``core.spmd.fused_scatter_round``).  Returns None when the round
+        cannot ride the mesh (indivisible slot/worker counts, host-loop
+        partitioner) — the caller then uses the single-device fused
+        lowering."""
+        from repro.core.shuffle import ReducePartitioner
+        from repro.core.spmd import fused_scatter_round
+        stacked = out.stacked
+        W, S = len(self.workers), stacked.n_slots
+        d = self.mesh.shape.get("data", 1)
+        if W % d or S % d or n <= 1 \
+                or isinstance(stage.partitioner, ReducePartitioner) \
+                or getattr(stage.partitioner, "scatter_spec", None) is None:
+            return None
+        spec = stage.partitioner.scatter_spec(
+            RecordBatch.empty(stacked.record_size), n)
+        if spec is None:
+            return None
+        key_spec, bounds = spec
+        rep.shuffle_rounds += 1
+        t0 = time.perf_counter()
+        parts_dev, counts_dev, hist_dev = fused_scatter_round(
+            stacked.data, jnp.asarray(stacked.n_valid, jnp.int32),
+            bounds, key_spec=key_spec, n_buckets=n, n_workers=W,
+            mesh=self.mesh)
+        rep.device_dispatches += 1
+        counts, hist_sb = jax.device_get((counts_dev, hist_dev))
+        rep.host_syncs += 1
+        origin_counts = np.zeros((n, W), np.int64)
+        for s in range(S):
+            origin_counts[:, int(out.slot_workers[s])] += hist_sb[s]
+        origins: Origins = [
+            {self.workers[w]: int(origin_counts[b, w]) * stacked.record_size
+             for w in np.nonzero(origin_counts[b])[0]}
+            for b in range(n)]
+        result = FusedRoundResult(parts_dev, counts.astype(np.int64),
+                                  origins, 1)
+        rep.partitioned_records += stacked.num_records
+        if self.timing_sync:
+            jax.block_until_ready(result.data)
+        rep.partition_seconds += time.perf_counter() - t0
+        return result, origins
+
+    def _bucketize_fused(self, stage: SphereStage, out: _StackedOut, n: int,
+                         rep: SphereReport):
+        """One fused shuffle round: O(1) dispatches, one host sync, one
+        regrouping gather — regardless of task or worker count.  Returns
+        None when the round cannot stay on the fused kernel path (the
+        caller downgrades to the per-worker loop)."""
+        if self.mesh is not None:
+            mesh_res = self._bucketize_mesh(stage, out, n, rep)
+            if mesh_res is not None:
+                return mesh_res
+        t0 = time.perf_counter()
+        rd = scatter_round_dispatch(out.stacked, stage.partitioner, n,
+                                    worker_names=self.workers,
+                                    slot_workers=out.slot_workers,
+                                    pad_block=self.pad_block)
+        if rd is None:
+            return None
+        rep.shuffle_rounds += 1
+        rep.device_dispatches += rd.dispatches
+        synced = jax.device_get(rd.sync_arrays)     # the round's ONE sync
+        rep.host_syncs += 1
+        result = rd.harvest(synced)
+        rep.device_dispatches += result.dispatches
+        rep.partitioned_records += out.stacked.num_records
+        if self.timing_sync:
+            if result.data is not None:
+                jax.block_until_ready(result.data)
+            elif result.groups:
+                jax.block_until_ready([g for _, g in result.groups])
+        rep.partition_seconds += time.perf_counter() - t0
+        return result, result.origins
+
     def bucketize(self, stage: SphereStage, out, n: int, rep: SphereReport
                   ) -> Tuple[List[List[RecordBatch]], Origins]:
         """Dispatch-then-sync array shuffle.
@@ -445,7 +769,34 @@ class ArrayExecutor(_ExecutorBase):
         ``pad_block``), so the kernel traces once per padded shape, not
         once per batch size; padding-resident stage outputs feed the
         scatter at their resident shape (junk tails ride to the kernel's
-        trash bucket) instead of being sliced and re-padded."""
+        trash bucket) instead of being sliced and re-padded.
+
+        With ``fused_rounds`` the stage output arrives stacked and the
+        whole round — every worker's scatter plus the regrouping onto
+        destination workers — runs through :func:`scatter_round_dispatch`
+        (or ``spmd.fused_scatter_round`` on a mesh) instead of this loop,
+        keeping ``device_dispatches`` O(1) per round."""
+        if self.timing_sync:
+            # start-of-timing barrier (benchmarks only, same policy as
+            # the stop barrier below): ``partition_seconds`` measures
+            # the shuffle round alone, so drain the stage's async
+            # output before starting the clock.  The fused round is one
+            # dependency chain — its single sync would otherwise charge
+            # the stacked UDF apply to the round, where the per-worker
+            # loop's many small dispatches drain on their own during
+            # intervening host work.
+            if isinstance(out, _StackedOut):
+                jax.block_until_ready(out.stacked.data)
+            else:
+                jax.block_until_ready([p.data for ps in out.values()
+                                       for p in ps])
+        if isinstance(out, _StackedOut):
+            fused = self._bucketize_fused(stage, out, n, rep)
+            if fused is not None:
+                return fused
+            # ineligible round (reduce partitioner, single bucket, odd
+            # record widths): downgrade to the per-worker loop
+            out = out.to_worker_dict(self.workers)
         buckets: List[List[RecordBatch]] = [[] for _ in range(n)]
         origins: Origins = [{} for _ in range(n)]
         rep.shuffle_rounds += 1
@@ -458,6 +809,7 @@ class ArrayExecutor(_ExecutorBase):
             disp = scatter_pieces_dispatch(pieces, stage.partitioner, n,
                                            pad_block=self.pad_block)
             rep.host_syncs += disp.host_syncs
+            rep.device_dispatches += 1              # the worker's scatter
             round_.append((w, sum(p.num_records for p in pieces), disp))
         pending = [d for (_, _, d) in round_ if d.pending]
         if pending:                                 # phase 2: one barrier
@@ -465,6 +817,7 @@ class ArrayExecutor(_ExecutorBase):
             rep.host_syncs += 1
             for d, s in zip(pending, synced):
                 d.harvest(synced=s)
+                rep.device_dispatches += d.n        # per-bucket slices
         for w, nrec, disp in round_:
             for i, piece in enumerate(disp.harvest()):
                 if piece.num_records:
@@ -481,6 +834,32 @@ class ArrayExecutor(_ExecutorBase):
         # bucket i lives on worker i % len(workers); a destination holding
         # several buckets keeps them in bucket order (matching the bytes
         # path's append order), merged into one device-resident batch
+        if isinstance(buckets, FusedRoundResult):
+            # the fused round already regrouped on device: slot i of the
+            # stacked result IS worker i's merged partition — parts hold
+            # zero-copy views into the stack, so chained stages restack
+            # for free (see _aligned_stacked)
+            if buckets.groups is not None:
+                # big rounds arrive as a few worker-contiguous group
+                # stacks (gather rows per call are capped, see
+                # FusedRoundResult.groups); every worker still gets a
+                # zero-copy view into its group's stack
+                for w0, arr in buckets.groups:
+                    g = StackedBatch(arr,
+                                     buckets.counts[w0:w0 + arr.shape[0]])
+                    for j in range(arr.shape[0]):
+                        parts[self.workers[w0 + j]] = (
+                            _SlotRef(g, j) if int(g.n_valid[j]) else None)
+                return
+            if buckets.data is None:
+                for w in self.workers:
+                    parts[w] = None
+                return
+            stacked = StackedBatch(buckets.data, buckets.counts)
+            for i, w in enumerate(self.workers):
+                parts[w] = (_SlotRef(stacked, i)
+                            if int(stacked.n_valid[i]) else None)
+            return
         incoming: Dict[str, List[RecordBatch]] = {w: [] for w in self.workers}
         for i, pieces in enumerate(buckets):
             incoming[self.workers[i % len(self.workers)]].extend(pieces)
@@ -489,22 +868,42 @@ class ArrayExecutor(_ExecutorBase):
                         if incoming[w] else None)
 
     def set_parts(self, parts, out) -> None:
+        if isinstance(out, _StackedOut):
+            # partitionerless stage: each worker keeps its own slots
+            slots: Dict[str, List[int]] = {w: [] for w in self.workers}
+            for s, wi in enumerate(out.slot_workers):
+                if int(out.stacked.n_valid[s]):
+                    slots[self.workers[int(wi)]].append(s)
+            for w in self.workers:
+                own = slots[w]
+                if not own:
+                    parts[w] = None
+                elif len(own) == 1:
+                    parts[w] = _SlotRef(out.stacked, own[0])
+                else:
+                    parts[w] = RecordBatch.concat(
+                        [out.stacked.slot(s) for s in own])
+            return
         for w in self.workers:
             parts[w] = RecordBatch.concat(out[w]) if out[w] else None
 
     def outputs(self, parts) -> List[bytes]:
         # the ONLY host materialisation of record data after stage 0
-        return [parts[w].to_bytes() for w in self.workers
+        return [_as_batch(parts[w]).to_bytes() for w in self.workers
                 if parts[w] is not None and parts[w].num_records]
 
 
 def make_executor(backend: str, client, workers: Sequence[str], *,
                   max_retries: int = 3, pad_block: int = 4096,
                   cache_chunks: bool = False, prefetch: bool = True,
-                  timing_sync: bool = False):
+                  prefetch_depth: int = 1, timing_sync: bool = False,
+                  fused_rounds: bool = True, mesh=None):
     if backend == "array":
         return ArrayExecutor(client, workers, max_retries=max_retries,
                              pad_block=pad_block, cache_chunks=cache_chunks,
-                             prefetch=prefetch, timing_sync=timing_sync)
+                             prefetch=prefetch, prefetch_depth=prefetch_depth,
+                             timing_sync=timing_sync,
+                             fused_rounds=fused_rounds, mesh=mesh)
     return BytesExecutor(client, workers, max_retries=max_retries,
-                         cache_chunks=cache_chunks, prefetch=prefetch)
+                         cache_chunks=cache_chunks, prefetch=prefetch,
+                         prefetch_depth=prefetch_depth)

@@ -64,6 +64,14 @@ class SphereReport:
     # syncs, and the bytes backend never syncs a device at all.
     shuffle_rounds: int = 0
     host_syncs: int = 0
+    # array backend: compiled device dispatches issued by the data plane's
+    # hot loop (stage UDF applies in run_stage + scatter/harvest work in
+    # bucketize).  The fused-round invariant is asserted on this counter:
+    # with ``fused_rounds`` a kernel-path shuffle round costs O(1)
+    # dispatches (one stacked UDF call, a bounded shard fan of scatter
+    # calls, one regrouping gather) regardless of task or worker count,
+    # where the per-task/per-worker loop costs O(tasks + workers).
+    device_dispatches: int = 0
 
 
 @dataclass(frozen=True)

@@ -333,6 +333,138 @@ class RecordBatch:
         return RecordBatch(raw.reshape(n, d * 4))
 
 
+def _pow2_rows(n: int, floor: int) -> int:
+    """Smallest padded row count >= n from the {2^k, 1.5 * 2^k} ladder,
+    floored at ``floor`` — the fixed shapes batches pad to so kernel
+    traces are shared across batch sizes.  The half-octave step caps
+    padding waste at ~33% (a pure power-of-two ladder can waste ~100%)
+    while keeping the number of distinct traced shapes per octave at 2."""
+    target = max(floor, 2)
+    while target < n:
+        if target + target // 2 >= n:
+            return target + target // 2
+        target *= 2
+    return target
+
+
+def _quarter_rows(n: int, floor: int) -> int:
+    """Smallest padded row count >= n from the quarter-octave
+    {2^k, 1.25*2^k, 1.5*2^k, 1.75*2^k} ladder, floored at ``floor``.
+
+    Finer than :func:`_pow2_rows` on purpose: the once-per-stage block
+    shape is computed a single time from the plan's largest task, so a
+    denser ladder costs no extra traces there — and it caps the
+    junk-tail at ~25% worst case (typically a few percent) where the
+    half-octave ladder allows ~33%.  That junk tail is not free: every
+    padding row rides through the segmented scatter's mask, kernel scan
+    and destination fetch each round (e.g. 5 000-record stage-0 chunks
+    pad to 5 120 here vs 6 144 on the half-octave ladder — an 18%
+    shuffle-volume cut at the TeraSort 1M scale).  Ad-hoc batch padding
+    (``scatter_batch``) keeps the coarser ladder, where fewer rungs
+    means more trace sharing across varying batch sizes."""
+    base = max(floor, 4)
+    while base * 2 < n:
+        base *= 2
+    if n <= base:
+        return base
+    for num in (5, 6, 7):
+        cand = base * num // 4
+        if cand >= n:
+            return cand
+    return base * 2
+
+
+@dataclass(frozen=True)
+class StackedBatch:
+    """A whole round's worth of batches as ONE device array.
+
+    ``data`` is uint8 [n_slots, block, width]: one slot per task/worker
+    of a fused engine round, every slot padded to the same quarter-octave
+    ``block`` row count so the stack is a single rectangular array.
+    ``n_valid`` is a HOST [n_slots] int32 vector of real row counts —
+    slot tails are junk padding exactly as in a padding-resident
+    :class:`RecordBatch`, and keeping the counts host-side means shape
+    queries (part sizes, plan block shapes) never touch the device.
+
+    This is the unit the fused data plane operates on: one vmapped UDF
+    call, one stacked scatter dispatch and one regrouping gather per
+    round, instead of a Python loop of per-slot dispatches.  A slot with
+    ``n_valid == 0`` is a real (empty) participant — empty workers ride
+    through the fused round for free rather than forcing a fallback.
+    """
+
+    data: jax.Array
+    n_valid: np.ndarray
+
+    def __post_init__(self):
+        if self.data.ndim != 3:
+            raise ValueError(f"StackedBatch data must be 3-D, "
+                             f"got shape {self.data.shape}")
+        nv = np.asarray(self.n_valid, dtype=np.int32)
+        if nv.shape != (self.data.shape[0],):
+            raise ValueError(f"n_valid shape {nv.shape} != "
+                             f"({self.data.shape[0]},)")
+        if nv.size and (int(nv.min()) < 0
+                        or int(nv.max()) > self.data.shape[1]):
+            raise ValueError(f"n_valid outside [0, {self.data.shape[1]}]")
+        object.__setattr__(self, "n_valid", nv)
+
+    # ------------------------------------------------------------ shape
+    @property
+    def n_slots(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def block_rows(self) -> int:
+        """Padded rows per slot (every slot shares one block shape)."""
+        return self.data.shape[1]
+
+    @property
+    def record_size(self) -> int:
+        return self.data.shape[2]
+
+    @property
+    def num_records(self) -> int:
+        """Real records across all slots."""
+        return int(self.n_valid.sum())
+
+    @property
+    def nbytes(self) -> int:
+        """Valid payload bytes across all slots (padding is free)."""
+        return self.num_records * self.record_size
+
+    # ------------------------------------------------------- conversions
+    def slot(self, i: int) -> RecordBatch:
+        """Slot ``i`` as a padding-resident RecordBatch (device slice)."""
+        return RecordBatch(self.data[i], n_valid=int(self.n_valid[i]))
+
+    def unpack(self) -> List[RecordBatch]:
+        return [self.slot(i) for i in range(self.n_slots)]
+
+    @staticmethod
+    def pack(batches: Sequence[RecordBatch], block: int | None = None,
+             pad_block: int = 4096) -> "StackedBatch":
+        """Stack batches into one [s, block, width] array.
+
+        ``block`` defaults to the quarter-octave ladder shape of the
+        largest batch (floored at ``pad_block``) so every slot shares
+        one padded shape; slot tails are junk, never materialised.
+        NOTE: this is the eager convenience — the executor's hot path
+        stacks inside its jitted UDF call instead, so the concat fuses
+        with the stage body (see ``_TracedUDF``)."""
+        if not batches:
+            raise ValueError("cannot stack zero batches")
+        width = batches[0].record_size
+        if any(b.record_size != width for b in batches):
+            raise ValueError("StackedBatch requires uniform record size")
+        n_valid = np.fromiter((b.num_records for b in batches), np.int32,
+                              count=len(batches))
+        if block is None:
+            block = _quarter_rows(max(int(n_valid.max()), 1), pad_block)
+        data = jnp.stack([b.block(block) for b in batches])
+        return StackedBatch(data, n_valid)
+
+
 def scatter_by_ids(batch: RecordBatch, ids, hist) -> List[RecordBatch]:
     """Split a batch into per-bucket batches given kernel (ids, hist).
 

@@ -49,8 +49,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.records import (RecordBatch, fnv1a32, scatter_by_ids,
-                                uniform_hash_bounds)
+from repro.core.records import (RecordBatch, StackedBatch,  # noqa: F401
+                                _pow2_rows, _quarter_rows, fnv1a32,
+                                scatter_by_ids, uniform_hash_bounds)
 from repro.kernels.bucket_partition import (bucket_dest, bucket_partition,
                                             bucket_scatter)
 
@@ -265,45 +266,8 @@ def shuffle_batch(batch: RecordBatch, partitioner, n: int, *,
     return scatter_by_ids(batch, ids, hist)
 
 
-def _pow2_rows(n: int, floor: int) -> int:
-    """Smallest padded row count >= n from the {2^k, 1.5 * 2^k} ladder,
-    floored at ``floor`` — the fixed shapes batches pad to so kernel
-    traces are shared across batch sizes.  The half-octave step caps
-    padding waste at ~33% (a pure power-of-two ladder can waste ~100%)
-    while keeping the number of distinct traced shapes per octave at 2."""
-    target = max(floor, 2)
-    while target < n:
-        if target + target // 2 >= n:
-            return target + target // 2
-        target *= 2
-    return target
-
-
-def _quarter_rows(n: int, floor: int) -> int:
-    """Smallest padded row count >= n from the quarter-octave
-    {2^k, 1.25*2^k, 1.5*2^k, 1.75*2^k} ladder, floored at ``floor``.
-
-    Finer than :func:`_pow2_rows` on purpose: the once-per-stage block
-    shape is computed a single time from the plan's largest task, so a
-    denser ladder costs no extra traces there — and it caps the
-    junk-tail at ~25% worst case (typically a few percent) where the
-    half-octave ladder allows ~33%.  That junk tail is not free: every
-    padding row rides through the segmented scatter's mask, kernel scan
-    and destination fetch each round (e.g. 5 000-record stage-0 chunks
-    pad to 5 120 here vs 6 144 on the half-octave ladder — an 18%
-    shuffle-volume cut at the TeraSort 1M scale).  Ad-hoc batch padding
-    (``scatter_batch``) keeps the coarser ladder, where fewer rungs
-    means more trace sharing across varying batch sizes."""
-    base = max(floor, 4)
-    while base * 2 < n:
-        base *= 2
-    if n <= base:
-        return base
-    for num in (5, 6, 7):
-        cand = base * num // 4
-        if cand >= n:
-            return cand
-    return base * 2
+# _pow2_rows / _quarter_rows live in repro.core.records (shared with
+# StackedBatch.pack) and are re-exported above for their historical home.
 
 
 def _single_bucket_pieces(batch: RecordBatch, n: int) -> List[RecordBatch]:
@@ -615,6 +579,376 @@ def scatter_pieces_dispatch(pieces: Sequence[RecordBatch], partitioner,
         batch = RecordBatch.concat(list(pieces))
     return scatter_dispatch(batch, partitioner, n, pad_block=pad_block,
                             block_n=block_n, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# Fused worker-axis round: the whole shuffle of a stage — every slot's key
+# extraction, kernel pass and destination bookkeeping — as O(1) dispatches
+# over a StackedBatch, instead of one dispatch per worker.
+
+#: Target rows per segmented-shard dispatch on the interpret (CPU)
+#: lowering.  The interpret kernel's cost grows super-linearly with the
+#: per-call row count at a fixed block_n (measured on the TeraSort 1M
+#: shape, 200 slots x 5120 rows: one flat call 101ms, 8 shards of ~128k
+#: rows 50ms — matching the old per-worker path — while a per-slot vmap
+#: took 599ms), so the stacked round is cut into at most
+#: ``_ROUND_MAX_SHARDS`` contiguous slot ranges of about this many rows.
+_ROUND_SHARD_ROWS = 131072
+_ROUND_MAX_SHARDS = 8
+
+
+@partial(jax.jit,
+         static_argnames=("size", "rows_eff", "n_buckets", "key_spec",
+                          "block_n", "interpret"))
+def _scatter_dest_shard(data, n_valids, bounds, lo, *, size: int,
+                        rows_eff: int, n_buckets: int, key_spec,
+                        block_n: int | None, interpret: bool):
+    """Destination vector + histogram for one contiguous slot range of a
+    stacked [s, rows, width] round — the stacked twin of
+    :func:`_scatter_dest_segments`.  The shard is sliced INSIDE the jit
+    (``lo`` is a dynamic start, ``size`` static), so the round re-traces
+    only per shard size (at most two sizes: the even split and the
+    remainder), never per shard position.  ``rows_eff`` trims each
+    slot's pad-ladder tail to the round's own quarter-ladder (every
+    junk row beyond it would ride through the mask, kernel scan and
+    destination fetch — at a 5k-record round on 4096-row slots that's
+    ~80% of the kernel's work); the slice is static inside the jit so
+    XLA fuses it for free."""
+    shard = jax.lax.dynamic_slice_in_dim(data, lo, size, axis=0)
+    nv = jax.lax.dynamic_slice_in_dim(n_valids, lo, size, axis=0)
+    shard = shard[:, :rows_eff]
+    s, rows, width = shard.shape
+    flat = shard.reshape(s * rows, width)
+    keys = _extract_keys(flat, key_spec)
+    pos = jax.lax.iota(jnp.int32, s * rows)
+    valid = (pos % rows) < nv[pos // rows]
+    return bucket_dest(keys, bounds, valid.astype(jnp.int32),
+                       n_buckets=n_buckets, block_n=block_n,
+                       interpret=interpret)
+
+
+@partial(jax.jit,
+         static_argnames=("n_buckets", "key_spec", "block_n", "interpret"))
+def _scatter_stacked(data, bounds, n_valids, *, n_buckets: int, key_spec,
+                     block_n: int | None, interpret: bool):
+    """The compiled-backend stacked round: ``bucket_scatter`` (key
+    extraction + kernel + on-device row movement) vmapped over the slot
+    axis.  One call scatters EVERY slot's rows bucket-contiguously and
+    returns the one [s, n_buckets] histogram the round syncs — rows
+    never leave the device.  (On CPU the segmented-shard path above is
+    used instead: interpret-mode vmap serialises the per-slot scans and
+    is ~10x slower than shard-flattened calls at the 1M shape.)"""
+    def one(slot, nv):
+        keys = _extract_keys(slot, key_spec)
+        return bucket_scatter(slot, keys, bounds, nv, n_buckets=n_buckets,
+                              block_n=block_n, interpret=interpret)
+    return jax.vmap(one)(data, n_valids)
+
+
+@partial(jax.jit, static_argnames=("rows_eff",))
+def _regroup_take(src, idx, *, rows_eff: int):
+    """The round's regrouping gather: flatten the [s, rows, width]
+    source and take the [W, block2] global row positions in one fused
+    program (the reshape is a view inside the jit, never a copy).
+    ``rows_eff`` is the same per-round row trim the scatter shards used
+    — harvest positions are strided by it.  The gather itself always
+    runs on a FLAT index (XLA:CPU's batched gather is ~2x slower than
+    the equivalent 1-D take); the index reshape and the output's
+    [wn, block2, width] restore are free inside the jit."""
+    s, _, width = src.shape
+    flat = jnp.take(src[:, :rows_eff].reshape(s * rows_eff, width),
+                    idx.reshape(-1), axis=0)
+    return flat.reshape(idx.shape[0], idx.shape[1], width)
+
+
+@dataclass
+class FusedRoundResult:
+    """The regrouped output of one fused shuffle round.
+
+    ``data`` is uint8 [n_workers, block2, width]: destination worker
+    ``w``'s resident partition occupies slot ``w`` — its buckets
+    ``{b : b % n_workers == w}`` concatenated in ascending bucket order,
+    records within a bucket in (slot-major, then input) order — i.e.
+    exactly the order the bytes backend's per-worker append loop
+    produces.  ``counts`` is the host [n_workers] valid-row vector
+    (``data`` tails are junk) and ``origins[b]`` maps origin worker name
+    to the bytes bucket ``b`` drew from it — the planner's movement
+    pricing input.
+
+    Large rounds come back SHARDED instead of as one stack: ``groups``
+    holds ``(w_start, stack)`` pairs covering consecutive worker ranges
+    (and ``data`` is None).  XLA:CPU's gather falls off its fast path
+    above ~``_ROUND_SHARD_ROWS`` rows per call (a single 1M-row take is
+    ~2x slower than the same rows split across a few separate calls),
+    so the harvest caps rows per regrouping call exactly like the
+    scatter caps rows per shard — the call count stays bounded by
+    ``_ROUND_MAX_SHARDS``, never O(workers).  ``data is None`` with no
+    ``groups`` means the round carried no records.
+    """
+
+    data: Optional[jax.Array]
+    counts: np.ndarray
+    origins: List[Dict[str, int]]
+    dispatches: int = 0
+    groups: Optional[List[Tuple[int, jax.Array]]] = None
+
+    @property
+    def record_size(self) -> int:
+        if self.data is not None:
+            return self.data.shape[2]
+        if self.groups:
+            return self.groups[0][1].shape[2]
+        return 0
+
+
+@dataclass
+class StackedRoundDispatch:
+    """The in-flight half of a FUSED shuffle round (cf. the per-batch
+    :class:`ScatterDispatch`).
+
+    :func:`scatter_round_dispatch` enqueues the whole round's device
+    work — O(1) compiled calls regardless of worker or task count —
+    and defers the single metadata sync into :meth:`harvest`.  Two
+    lowerings share this container:
+
+    * **segmented (CPU)** — at most ``_ROUND_MAX_SHARDS`` shard calls of
+      :func:`_scatter_dest_shard`; ``metas`` holds each shard's
+      (dest, hist) and harvest inverts the permutations host-side
+      (numpy fancy assignment at memcpy speed).
+    * **vmapped (TPU/GPU)** — ONE :func:`_scatter_stacked` call whose
+      device epilogue already moved the rows; ``metas`` holds the
+      [s, n] per-slot histogram and harvest only computes offsets.
+
+    Either way :attr:`sync_arrays` is fetched in one ``device_get`` per
+    round and :meth:`harvest` finishes with ONE gather that lands every
+    destination worker's regrouped partition in a single stacked array —
+    the device-side segment permutation that replaces the per-worker
+    ``RecordBatch.concat`` loop.
+    """
+
+    n: int                           # bucket count
+    worker_names: List[str]          # destination ring (bucket b -> b % W)
+    slot_workers: np.ndarray         # [s] origin ring index per slot
+    rows: int                        # padded rows per slot
+    width: int
+    pad_block: int
+    src: jax.Array                   # [s, rows, width] round source
+    mode: str                        # "segmented" | "vmapped"
+    shards: List[Tuple[int, int]]    # segmented: (lo, size) slot ranges
+    metas: List[Tuple[jax.Array, ...]]
+    dispatches: int = 0
+    host_syncs: int = 0
+
+    @property
+    def sync_arrays(self):
+        """Device metadata the round barrier fetches — per-shard
+        (dest, hist) on the segmented path, the [s, n] histogram on the
+        vmapped path.  Record bytes never cross."""
+        return tuple(a for m in self.metas for a in m)
+
+    def harvest(self, synced=None) -> FusedRoundResult:
+        """Regroup the round onto destination workers.  ``synced`` is
+        the already-fetched :attr:`sync_arrays` tuple; omitted, the
+        dispatch syncs its own (counted in :attr:`host_syncs`)."""
+        if synced is None:
+            synced = jax.device_get(self.sync_arrays)
+            self.host_syncs += 1
+        W, B, rows = len(self.worker_names), self.n, self.rows
+        seg_pos: List[List[np.ndarray]] = [[] for _ in range(B)]
+        origin_counts = np.zeros((B, W), np.int64)
+        if self.mode == "segmented":
+            i = 0
+            for lo, size in self.shards:
+                dest = np.asarray(synced[i])
+                hist = np.asarray(synced[i + 1])
+                i += 2
+                perm = np.empty(dest.shape[0], np.int32)
+                perm[dest] = np.arange(dest.shape[0], dtype=np.int32)
+                off = np.concatenate(([0], np.cumsum(hist[:B])))
+                n_valid = int(off[B])
+                if not n_valid:
+                    continue
+                # dest order is bucket-contiguous, so perm[:n_valid] is
+                # every bucket's ascending input rows back to back;
+                # int32 throughout — global positions top out at s*rows
+                gpos_all = perm[:n_valid] + np.int32(lo * rows)
+                # each bucket's run is ascending, so slot boundaries
+                # fall out of a searchsorted against the shard's slot
+                # edges — origin pricing without touching every row
+                # (the per-row bucket/worker decode was ~9ms of a ~20ms
+                # 1M harvest)
+                edges = (lo + np.arange(1, size)) * rows
+                shard_workers = self.slot_workers[lo:lo + size]
+                for b in range(B):
+                    if off[b + 1] > off[b]:
+                        seg = gpos_all[off[b]:off[b + 1]]
+                        seg_pos[b].append(seg)
+                        per_slot = np.diff(np.concatenate(
+                            ([0], np.searchsorted(seg, edges),
+                             [seg.size])))
+                        np.add.at(origin_counts[b], shard_workers,
+                                  per_slot)
+        else:
+            hist_sb = np.asarray(synced[0])[:, :B].astype(np.int64)
+            off_sb = np.cumsum(hist_sb, axis=1) - hist_sb  # exclusive
+            for b in range(B):
+                for s in range(hist_sb.shape[0]):
+                    c = int(hist_sb[s, b])
+                    if c:
+                        start = s * rows + int(off_sb[s, b])
+                        seg_pos[b].append(
+                            np.arange(start, start + c, dtype=np.int64))
+                        origin_counts[b, self.slot_workers[s]] += c
+        origins = [
+            {self.worker_names[w]: int(origin_counts[b, w]) * self.width
+             for w in np.nonzero(origin_counts[b])[0]}
+            for b in range(B)]
+        counts = np.zeros(W, np.int64)
+        hist_total = origin_counts.sum(axis=1)
+        for b in range(B):
+            counts[b % W] += hist_total[b]
+        nmax = int(counts.max()) if W else 0
+        if nmax == 0:
+            return FusedRoundResult(None, counts, origins, 0)
+        # the regrouped stack gets its own quarter-ladder row count (same
+        # trim rationale as scatter_round_dispatch's rows_eff: the
+        # stage's pad_block floor would make a 1k-record partition carry
+        # a 4096-row gather output)
+        block2 = _quarter_rows(nmax, min(self.pad_block, 256))
+
+        def idx_rows(ws) -> np.ndarray:
+            """Global gather positions for workers ``ws`` (consecutive):
+            each worker's buckets ascending, shard order within a
+            bucket, input order within a shard — the bytes backend's
+            append order.  Junk tail slots point at row 0; their content
+            is never read (counts marks the valid prefixes)."""
+            sub = np.zeros((len(ws), block2), np.int32)
+            for j, w in enumerate(ws):
+                fill = 0
+                for b in range(w, B, W):
+                    for gpos in seg_pos[b]:
+                        sub[j, fill:fill + gpos.size] = gpos
+                        fill += gpos.size
+            return sub
+
+        # The regrouping gather(s).  The [s, rows] -> [s*rows] flatten
+        # happens INSIDE the gather jit where XLA fuses it away — an
+        # eager reshape on XLA:CPU is a full copy of the round (~60ms at
+        # the 1M shape).  Rows per call are capped like the scatter
+        # shards: XLA:CPU's gather loses its fast path above
+        # ~_ROUND_SHARD_ROWS rows per call, so big rounds split into at
+        # most _ROUND_MAX_SHARDS worker-contiguous group takes —
+        # bounded, never O(workers) — and each group's take is
+        # dispatched as soon as its index rows are built, so the host
+        # index build for group g+1 hides behind group g's gather.
+        n_groups = int(min(_ROUND_MAX_SHARDS, W,
+                           max(1, (W * block2) // _ROUND_SHARD_ROWS)))
+        if n_groups <= 1:
+            data = _regroup_take(self.src, jnp.asarray(idx_rows(range(W))),
+                                 rows_eff=self.rows)
+            return FusedRoundResult(data, counts, origins, 1)
+        groups: List[Tuple[int, jax.Array]] = []
+        w0 = 0
+        for part in np.array_split(np.arange(W), n_groups):
+            ws = [w0 + j for j in range(int(part.size))]
+            groups.append(
+                (w0, _regroup_take(self.src, jnp.asarray(idx_rows(ws)),
+                                   rows_eff=self.rows)))
+            w0 += int(part.size)
+        return FusedRoundResult(None, counts, origins, n_groups,
+                                groups=groups)
+
+
+def scatter_round_dispatch(stacked: StackedBatch, partitioner, n: int, *,
+                           worker_names: Sequence[str],
+                           slot_workers=None, pad_block: int = 4096,
+                           block_n: int | None = None,
+                           interpret: bool | None = None,
+                           lowering: str | None = None
+                           ) -> Optional[StackedRoundDispatch]:
+    """Enqueue a WHOLE round's shuffle over a stacked slot axis; never
+    blocks.  Returns ``None`` when the round cannot stay on the fused
+    kernel path (single bucket, reduce shuffle, host-loop partitioner,
+    empty stack) — the caller falls back to the per-worker dispatch loop.
+
+    ``slot_workers[i]`` names (by index into ``worker_names``) the worker
+    whose stage output slot ``i`` holds, for movement accounting; slots
+    must be ordered worker-major (ascending ``worker_names`` order, plan
+    order within a worker) so the regrouped record order matches the
+    bytes backend's append order record-for-record.  ``lowering``
+    forces ``"segmented"`` / ``"vmapped"`` (default: segmented on the
+    interpret/CPU backend, vmapped on compiled backends)."""
+    s, rows, width = stacked.data.shape
+    if n <= 1 or s == 0 or rows == 0 \
+            or isinstance(partitioner, ReducePartitioner) \
+            or getattr(partitioner, "scatter_spec", None) is None:
+        return None
+    # partitioners are immutable after construction, so the per-round
+    # (key spec, device bounds) pair is cached on the instance — the
+    # spec build + bounds device_put are ~0.3ms of host work per round,
+    # which is real money on a ~2ms small round
+    cached = getattr(partitioner, "_round_spec_cache", None)
+    if cached is not None and cached[0] == (n, width):
+        _, key_spec, bounds_dev = cached
+    else:
+        spec = partitioner.scatter_spec(RecordBatch.empty(width), n)
+        if spec is None:
+            return None
+        key_spec, bounds = spec
+        bounds_dev = jnp.asarray(bounds)
+        try:
+            partitioner._round_spec_cache = ((n, width), key_spec,
+                                             bounds_dev)
+        except AttributeError:
+            pass                       # __slots__ partitioner: skip cache
+    if interpret is None:
+        interpret = jax.default_backend() not in ("tpu", "gpu")
+    if lowering is None:
+        lowering = "segmented" if interpret else "vmapped"
+    W = len(worker_names)
+    if slot_workers is None:
+        slot_workers = np.arange(s, dtype=np.int64) % max(W, 1)
+    else:
+        slot_workers = np.asarray(slot_workers, dtype=np.int64)
+    nv_dev = jnp.asarray(stacked.n_valid, jnp.int32)
+    metas: List[Tuple[jax.Array, ...]] = []
+    shards: List[Tuple[int, int]] = []
+    if lowering == "vmapped":
+        src, hist_sb = _scatter_stacked(stacked.data, bounds_dev, nv_dev,
+                                        n_buckets=n, key_spec=key_spec,
+                                        block_n=block_n, interpret=interpret)
+        metas.append((hist_sb,))
+        dispatches = 1              # the stacked scatter
+    else:
+        src = stacked.data          # flattened inside the harvest gather
+        dispatches = 0
+        # trim each slot to the round's own quarter-ladder row count:
+        # pad-ladder slots carry the STAGE's block shape (e.g. 4096-row
+        # floors), but the round only needs rows up to its max n_valid —
+        # the trim is a static in-jit slice and cuts the kernel's junk
+        # work ~4x on small rounds
+        nv_max = int(np.max(stacked.n_valid)) if s else 0
+        rows = min(rows, _quarter_rows(nv_max, 256))
+        n_shards = min(s, max(1, min(_ROUND_MAX_SHARDS,
+                                     -(-s * rows // _ROUND_SHARD_ROWS))))
+        base_sz = -(-s // n_shards)
+        lo = 0
+        while lo < s:
+            size = min(base_sz, s - lo)
+            shard_bn = _cpu_block_n(size * rows) if block_n is None \
+                else block_n
+            dest, hist = _scatter_dest_shard(
+                stacked.data, nv_dev, bounds_dev, lo, size=size,
+                rows_eff=rows, n_buckets=n, key_spec=key_spec,
+                block_n=shard_bn, interpret=interpret)
+            metas.append((dest, hist))
+            shards.append((lo, size))
+            dispatches += 1
+            lo += size
+    return StackedRoundDispatch(
+        n=n, worker_names=list(worker_names), slot_workers=slot_workers,
+        rows=rows, width=width, pad_block=pad_block, src=src,
+        mode=lowering, shards=shards, metas=metas, dispatches=dispatches)
 
 
 def terasort_stages(bounds: Sequence[bytes], backend: str, n_buckets: int,

@@ -25,11 +25,16 @@ SENTINEL = jnp.uint32(0xFFFFFFFF)
 
 
 def sphere_map(udf: Callable, mesh: Mesh, axis: str = "data"):
-    """Lift a per-shard UDF into a distributed Sphere stage."""
-    def stage(x):
+    """Lift a per-shard UDF into a distributed Sphere stage.
+
+    Variadic: every argument (and the result) is sharded over ``axis``
+    along its leading dimension — e.g. the engine's fused stage apply
+    passes (stacked data, per-slot valid counts)."""
+    def stage(*xs):
         fn = _shard_map(udf, mesh=mesh,
-                        in_specs=P(axis), out_specs=P(axis))
-        return fn(x)
+                        in_specs=tuple(P(axis) for _ in xs),
+                        out_specs=P(axis))
+        return fn(*xs)
     return stage
 
 
@@ -42,6 +47,123 @@ def sphere_shuffle(x: jax.Array, bucket_of_shard: Callable, mesh: Mesh,
                               tiled=True)
     fn = _shard_map(body, mesh=mesh, in_specs=P(axis), out_specs=P(axis))
     return fn(x)
+
+
+def fused_scatter_round(data: jax.Array, n_valids: jax.Array, bounds,
+                        *, key_spec, n_buckets: int, n_workers: int,
+                        mesh: Mesh, axis: str = "data",
+                        interpret: bool | None = None):
+    """The engine's fused shuffle round lowered through ``shard_map``:
+    per-shard key extraction + ``bucket_partition`` kernel, the exchange
+    as ``lax.all_to_all``, and on-device regrouping onto destination
+    workers — the multi-device twin of the host-driven
+    ``scatter_round_dispatch`` harvest, sharing its record ordering
+    contract exactly.
+
+    ``data`` is uint8 [S, rows, width] — the engine's stacked round,
+    slots ordered worker-major and sharded contiguously over ``axis``
+    (S must divide by the mesh size D) — and ``n_valids`` its int32 [S]
+    valid-count vector.  ``n_workers`` must divide by D; worker ``w``
+    is resident on device ``w // (n_workers // D)`` and owns buckets
+    ``{b : b % n_workers == w}``.
+
+    Returns ``(parts, counts, hist_sb)``:
+
+    * ``parts`` uint8 [n_workers, cap, width] (sharded over ``axis``) —
+      worker ``w``'s regrouped partition in slot ``w``: its buckets in
+      ascending order, records within a bucket in (slot-major, then
+      input) order.  ``cap`` is the static all_to_all capacity
+      (D * local rows); tails are junk.
+    * ``counts`` int32 [n_workers] — valid prefixes of ``parts``.
+    * ``hist_sb`` int32 [S, n_buckets] — the per-slot histogram, the ONE
+      metadata array the executor syncs for movement accounting.
+
+    Per-shard work stays a single fused program: the send buffer is
+    packed with the one-stable-argsort + section-offset idiom of
+    :func:`distributed_sort`, with an int32 bucket-id sidecar (−1 =
+    empty) exchanged alongside the rows so the receiver can regroup
+    without a second metadata round-trip.
+    """
+    from repro.core.shuffle import _extract_keys, _kernel_partition
+
+    D = mesh.shape[axis]
+    if n_workers % D or data.shape[0] % D:
+        raise ValueError(f"fused_scatter_round needs S ({data.shape[0]}) "
+                         f"and n_workers ({n_workers}) divisible by the "
+                         f"mesh size ({D})")
+    wpd = n_workers // D
+    rows, width = data.shape[1], data.shape[2]
+    bounds_np = bounds
+
+    def body(local, nv):
+        s_l = local.shape[0]
+        m = s_l * rows
+        flat = local.reshape(m, width)
+        keys = _extract_keys(flat, key_spec)
+        ids, _ = _kernel_partition(keys, bounds_np, n_buckets,
+                                   interpret=interpret)
+        pos = lax.iota(jnp.int32, m)
+        slot = pos // rows
+        valid = (pos % rows) < nv[slot]
+        hist_sb = jnp.zeros((s_l, n_buckets), jnp.int32) \
+            .at[slot, ids].add(valid.astype(jnp.int32))
+        # --- sender: rows sorted by (dest device, bucket), stable, then
+        # scattered into per-destination sections of the send buffer
+        e = (ids % n_workers) // wpd                        # dest device
+        skey = jnp.where(valid, e * (n_buckets + 1) + ids,
+                         D * (n_buckets + 1))               # invalid last
+        order = jnp.argsort(skey)                           # stable
+        se, sb, sv = e[order], ids[order], valid[order]
+        srows = flat[order]
+        sec_count = jnp.sum(
+            jnp.where(valid[:, None],
+                      jax.nn.one_hot(e, D, dtype=jnp.int32), 0), axis=0)
+        sec_start = jnp.cumsum(sec_count) - sec_count
+        pos_in = lax.iota(jnp.int32, m) - sec_start[se]
+        se_ = jnp.where(sv, se, D)                          # D = dropped
+        send = jnp.zeros((D, m, width), jnp.uint8) \
+            .at[se_, pos_in].set(srows, mode="drop")
+        meta = jnp.full((D, m), -1, jnp.int32) \
+            .at[se_, pos_in].set(sb, mode="drop")
+        recv = lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+        rmeta = lax.all_to_all(meta, axis, split_axis=0, concat_axis=0,
+                               tiled=True)
+        # --- receiver: one stable sort by (local worker, bucket) lands
+        # every incoming row in its worker's bucket-ordered partition;
+        # source sections arrive device-major, so ties keep slot-major
+        # input order — the host harvest's ordering contract
+        n2 = D * m
+        rb = rmeta.reshape(n2)
+        rr = recv.reshape(n2, width)
+        dev = lax.axis_index(axis)
+        rkey = jnp.where(rb >= 0,
+                         ((rb % n_workers) - dev * wpd) * (n_buckets + 1)
+                         + rb,
+                         wpd * (n_buckets + 1))
+        rorder = jnp.argsort(rkey)                          # stable
+        sr = rr[rorder]
+        srb = rb[rorder]
+        srv = srb >= 0
+        sli = jnp.where(srv, (srb % n_workers) - dev * wpd, wpd)
+        sli_c = jnp.clip(sli, 0, wpd - 1)
+        wcount = jnp.sum(
+            jnp.where(srv[:, None],
+                      jax.nn.one_hot(sli_c, wpd, dtype=jnp.int32), 0),
+            axis=0)
+        wstart = jnp.cumsum(wcount) - wcount
+        posw = lax.iota(jnp.int32, n2) - wstart[sli_c]
+        out = jnp.zeros((wpd, n2, width), jnp.uint8) \
+            .at[sli, posw].set(sr, mode="drop")             # wpd = dropped
+        return out, wcount, hist_sb
+
+    # check_rep=False: shard_map has no replication rule for pallas_call
+    # (the bucket_partition kernel); every output is explicitly sharded
+    # over ``axis`` anyway, so replication tracking buys nothing here.
+    fn = _shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
+                    out_specs=(P(axis), P(axis), P(axis)),
+                    check_rep=False)
+    return fn(data, n_valids)
 
 
 # ---------------------------------------------------------------------------

@@ -37,7 +37,6 @@ workers — the event-driven replacement for the old manual
 """
 from __future__ import annotations
 
-import weakref
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -45,6 +44,7 @@ from repro.core.executor import make_executor
 from repro.core.job import SphereJob
 from repro.core.planner import (IncrementalPlan, SpherePlanner, SphereReport,
                                 TaskSpec)
+from repro.sector.events import weak_subscribe
 
 __all__ = ["SphereStream", "WindowPolicy"]
 
@@ -52,24 +52,10 @@ __all__ = ["SphereStream", "WindowPolicy"]
 WindowCallback = Callable[["SphereStream", int, Tuple[str, ...]], None]
 
 
-def _weak_subscribe(bus, owner, method_name: str, **filters):
-    """Subscribe ``owner.method_name`` through a weakref: the bus must
-    never keep a stream (and its executor/chunk caches) alive.  A
-    session that was never ``close()``-d — the entire pre-stream idiom
-    for ``engine.session()`` — gets garbage-collected normally, and its
-    dead subscription self-unsubscribes on the next matching event."""
-    ref = weakref.ref(owner)
-    box = {}
-
-    def callback(event):
-        target = ref()
-        if target is None:
-            bus.unsubscribe(box["sub"])
-            return
-        getattr(target, method_name)(event)
-
-    box["sub"] = bus.subscribe(callback, **filters)
-    return box["sub"]
+# the weakref-subscription helper grew up and moved to the event bus
+# module (the replication daemon needs it too); re-exported here for
+# backwards compatibility with callers that imported the private name
+_weak_subscribe = weak_subscribe
 
 
 @dataclass(frozen=True)
@@ -211,7 +197,12 @@ class SphereStream:
                                       pad_block=self.engine.pad_block,
                                       cache_chunks=self._cache_chunks,
                                       prefetch=self.engine.prefetch,
-                                      timing_sync=self.engine.timing_sync)
+                                      prefetch_depth=getattr(
+                                          self.engine, "prefetch_depth", 1),
+                                      timing_sync=self.engine.timing_sync,
+                                      fused_rounds=getattr(
+                                          self.engine, "fused_rounds", True),
+                                      mesh=getattr(self.engine, "mesh", None))
         self._needs_bind = False
 
     @property

@@ -33,6 +33,7 @@ Ordering guarantees (the property streams rely on):
 """
 from __future__ import annotations
 
+import weakref
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, Iterable, List, Optional
@@ -151,3 +152,24 @@ class EventBus:
         if errors:
             raise errors[0]
         return ev
+
+
+def weak_subscribe(bus: EventBus, owner, method_name: str, **filters
+                   ) -> Subscription:
+    """Subscribe ``owner.method_name`` through a weakref: the bus must
+    never keep its subscribers (streams with their executor/chunk
+    caches, replication daemons) alive.  An owner that was never
+    explicitly closed gets garbage-collected normally, and its dead
+    subscription self-unsubscribes on the next matching event."""
+    ref = weakref.ref(owner)
+    box = {}
+
+    def callback(event):
+        target = ref()
+        if target is None:
+            bus.unsubscribe(box["sub"])
+            return
+        getattr(target, method_name)(event)
+
+    box["sub"] = bus.subscribe(callback, **filters)
+    return box["sub"]

@@ -67,6 +67,55 @@ def test_failure_detection_and_repair(tmp_path):
     assert client.download("f") == data
 
 
+def test_death_event_triggers_repair_without_tick(tmp_path):
+    """Event-driven repair: a ``server-died`` bus event (graceful
+    deregistration here) makes the daemon restore replication during the
+    event delivery itself — no poll tick, no scan_interval wait."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1024)
+    data = np.random.default_rng(1).bytes(8_000)
+    client.upload("f", data, replication=2)
+    daemon = ReplicationDaemon(master, client)
+    servers[0].kill()
+    master.deregister("s0")       # publishes server-died
+    assert daemon.event_repairs >= 1
+    assert master.stats()["under_replicated"] == 0
+    assert client.download("f") == data
+
+
+def test_heartbeat_timeout_repairs_inside_check(tmp_path):
+    """A heartbeat-timeout failure publishes server-died from inside
+    ``check_failures``, so the tick's own interval scan finds nothing
+    left to do — the event subscription already repaired it."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1024)
+    client.upload("f", b"x" * 6000, replication=2)
+    daemon = ReplicationDaemon(master, client, scan_interval=10.0)
+    servers[1].kill()
+    for t in (0, 10, 20, 40):
+        for s in servers:
+            if s.alive:
+                master.heartbeat(s.server_id, t)
+    rep = daemon.tick(40.0)
+    assert rep["failed"] == ["s1"]
+    assert daemon.event_repairs >= 1
+    assert rep["repaired"] == 0   # interval scan had nothing left
+    assert master.stats()["under_replicated"] == 0
+
+
+def test_polling_daemon_still_repairs_without_events(tmp_path):
+    """event_driven=False restores the pure polling daemon (the repair
+    latency A/B baseline): repair happens only at the interval scan."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1024)
+    client.upload("f", b"y" * 6000, replication=2)
+    daemon = ReplicationDaemon(master, client, event_driven=False)
+    servers[0].kill()
+    master.deregister("s0")
+    assert daemon.event_repairs == 0
+    assert master.stats()["under_replicated"] > 0  # nothing ran yet
+    rep = daemon.tick(10.0)
+    assert rep["repaired"] >= 1
+    assert master.stats()["under_replicated"] == 0
+
+
 def test_whole_site_loss_keeps_checkpoints_readable(tmp_path):
     master, servers, client = make_cloud(tmp_path, chunk_size=1024,
                                          n_servers=8)
