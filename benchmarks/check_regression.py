@@ -73,6 +73,13 @@ WATCHED = [
      ("result", "stream", "window_rec_per_s"), "abs"),
     ("BENCH_stream_window.json",
      ("result", "stream", "speedup"), "ratio"),
+    # wide-area scheduling: on the bottlenecked 4-site layout,
+    # contention-aware plans vs contention-blind plans both priced under
+    # the per-link queueing model.  Purely simulated-clock, so it barely
+    # wobbles; a fall back to private-link pricing drags it to ~1.0,
+    # far past any tolerance.  Baseline pinned below the smoke value.
+    ("BENCH_wan.json",
+     ("result", "wan", "contention_aware_speedup"), "ratio"),
 ]
 
 

@@ -47,13 +47,14 @@ def main(argv=None) -> int:
     os.makedirs(args.out_dir, exist_ok=True)
 
     from benchmarks import (roofline, stream_window, table1_llpr,
-                            table2_kmeans, table3_terasort)
+                            table2_kmeans, table3_terasort, wan_scenario)
 
     sections = [
         ("table1_llpr", table1_llpr.main),
         ("table2_kmeans", table2_kmeans.main),
         ("table3_terasort", table3_terasort.main),
         ("stream_window", stream_window.main),
+        ("wan", wan_scenario.main),
         ("roofline", roofline.main),
     ]
     failed = [name for name, fn in sections

@@ -70,13 +70,24 @@ class SphereEngine:
                  speculate_factor: float = 1.8, max_retries: int = 3,
                  pad_block: int = 4096, prefetch: bool = True,
                  prefetch_depth: int = 1, timing_sync: bool = False,
-                 fused_rounds: bool = True, mesh=None):
+                 fused_rounds: bool = True, mesh=None,
+                 contention_aware: bool = True, offload: bool = False):
         self.master = master
         self.client = client
         self.speeds = speeds or {}
         self.speculate_factor = speculate_factor
         self.max_retries = max_retries
         self.pad_block = pad_block
+        # contention_aware: planners built by this engine's sessions and
+        # streams price cross-site transfers with per-link capacity
+        # accounting (tasks sharing a wide-area wave queue on it) rather
+        # than as private parallel links; the contention-blind estimate
+        # is kept available (off) for the WAN benchmark's comparison.
+        # offload: let the planner place stage tasks on non-replica
+        # workers when the priced cross-site fetch still wins (default
+        # off = the paper's locality-first placement).
+        self.contention_aware = contention_aware
+        self.offload = offload
         # prefetch: overlap stage-0 chunk fetch+decode of the next
         # ``prefetch_depth`` tasks with the dispatch of task i
         # (result-identical at any depth — off only for A/B tests and
@@ -103,6 +114,14 @@ class SphereEngine:
         link = self.master.topology.link(self.master.servers[src].site,
                                          self.master.servers[dst].site)
         return simulate_transfer(nbytes, link, self.client.protocol).seconds
+
+    def _link_of(self, src: str, dst: str):
+        """Physical path a worker-to-worker transfer rides — the
+        planner's per-link capacity-accounting key (None = uncontended
+        intra-site movement).  Workers at the same site pair share a
+        key, so their transfers queue on the one wide-area wave."""
+        return self.master.topology.link_key(self.master.servers[src].site,
+                                             self.master.servers[dst].site)
 
     # ------------------------------------------------- benchmark hooks
     def _schedule_view(self, tasks: List[TaskSpec]) -> List[TaskSpec]:

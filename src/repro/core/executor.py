@@ -184,7 +184,13 @@ class BytesExecutor(_ExecutorBase):
                 # hand UDFs a copy: an in-place-mutating UDF (sort,
                 # pop) must not corrupt the cache for later jobs
                 records = list(records)
-            out[t.executor].extend(stage.apply_bytes(records))
+            # stage-0 chunks land wherever they were computed; a later
+            # stage's partition keeps its OWNER slot even when the
+            # planner priced the compute elsewhere — merging two
+            # partitions into one executor slot would destroy partition
+            # identity (and a sort stage's per-partition record order)
+            dst = t.executor if first_stage else t.key
+            out[dst].extend(stage.apply_bytes(records))
         return out
 
     def bucketize(self, stage: SphereStage, out, n: int, rep: SphereReport
@@ -546,22 +552,26 @@ class ArrayExecutor(_ExecutorBase):
         for t, batch in source:
             if batch is None or not batch.num_records:
                 continue
+            # same owner-slot rule as the bytes executor: a later stage's
+            # partition stays in its owner's slot regardless of where the
+            # planner priced the compute
+            dst = t.executor if first_stage else t.key
             if masked:
                 # a mask-aware stage NEVER leaves the fixed-shape array
                 # path — even a single tiny partial batch in a chained
                 # reduce job pads up to the block shape rather than
                 # silently taking a decode/bytes fallback
                 if batch.num_records:
-                    out[t.executor].append(
+                    out[dst].append(
                         self._apply_masked(stage, batch, target, rep))
             elif pad_stable and target:
-                out[t.executor].append(
+                out[dst].append(
                     self._apply_padded(stage, batch, target, rep))
             else:
                 # legacy/compat path: bytes-udf decode, per-shape tracing
                 # (shape-polymorphic UDFs see exact batches, never junk
                 # padding rows)
-                out[t.executor].append(stage.apply_batch(batch.compact()))
+                out[dst].append(stage.apply_batch(batch.compact()))
                 rep.device_dispatches += 1
         return out
 
@@ -608,11 +618,12 @@ class ArrayExecutor(_ExecutorBase):
                          plan: StagePlan, parts, rep: SphereReport,
                          first_stage: bool, target: int):
         """The whole stage as ONE vmapped UDF dispatch over a stacked
-        slot axis.  Slots collect worker-major (ascending executor
-        order, plan order within a worker — the per-worker dict path's
-        iteration order, so record order is preserved exactly).
-        Returns None when the stage must take the per-task path (a
-        task placed on an unknown worker)."""
+        slot axis.  Slots collect worker-major (ascending slot-worker
+        order — the chunk's executor at stage 0, the partition's OWNER
+        later, matching the per-worker dict path — plan order within a
+        worker, so record order is preserved exactly).  Returns None
+        when the stage must take the per-task path (a task placed on an
+        unknown worker)."""
         windex = {w: i for i, w in enumerate(self.workers)}
         if any(t.executor not in windex for t in plan.tasks):
             return None
@@ -640,7 +651,7 @@ class ArrayExecutor(_ExecutorBase):
             for t in plan.tasks:
                 batch = _as_batch(parts.get(t.key))
                 if batch is not None and batch.num_records:
-                    items.append((windex[t.executor], batch))
+                    items.append((windex[t.key], batch))
         if not items:
             # nothing to run — return the legacy-shaped empty dict
             # directly (falling back to the per-task loop would replay

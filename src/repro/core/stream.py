@@ -12,8 +12,10 @@ generalization of :class:`repro.core.engine.SphereSession` that
 * subscribes to a Sector path prefix (e.g. ``angle/window_``) on the
   master's event bus: every ``file-created`` whose path matches is an
   *arrival*;
-* maintains a window policy (:class:`WindowPolicy` — tumbling, sliding
-  or count-based) over the arrival sequence; when the policy fires, the
+* maintains a window policy (:class:`WindowPolicy` — tumbling, sliding,
+  count-based, or event-**timed** with a simulated-clock watermark and a
+  late-arrival grace period, for files landing at different sites at
+  different times) over the arrival sequence; when the policy fires, the
   stream's current window becomes the policy's file set and the optional
   ``on_window`` callback runs — synchronously, during the upload that
   completed the window, which is exactly "the data waits for the task";
@@ -64,26 +66,44 @@ class WindowPolicy:
 
     ``size`` is the window extent in files (``None`` = every arrival so
     far — a growing landmark window); ``step`` is how many arrivals pass
-    between firings.  The three classic shapes are classmethods:
+    between firings.  The classic shapes are classmethods:
 
     * ``tumbling(size)``   — non-overlapping: fires every ``size``
       arrivals over the latest ``size`` files;
     * ``sliding(size, step=1)`` — overlapping: fires every ``step``
       arrivals (once ``size`` have arrived) over the latest ``size``;
     * ``count(every=1)``   — count-based landmark: fires every ``every``
-      arrivals over *all* files so far.
+      arrivals over *all* files so far;
+    * ``timed(span_s, grace_s=0.0)`` — EVENT-time tumbling windows on
+      the simulated clock, for files landing at different sites at
+      different times: arrival ``i`` belongs to bucket
+      ``int(event_time // span_s)``, and a bucket fires once the
+      *watermark* — the latest event time seen, minus the ``grace_s``
+      late-arrival allowance — passes the bucket's end.  Buckets fire
+      in order; a file whose bucket already fired is counted as late
+      and dropped (``SphereStream.late_dropped``), never silently
+      merged into the wrong window.  Count-based ``fires``/``window``
+      do not apply to timed policies (windowing is driven by
+      event time, not arrival count).
     """
     kind: str
     size: Optional[int]
     step: int
+    span_s: float = 0.0     # timed windows: event-time extent, seconds
+    grace_s: float = 0.0    # timed windows: late-arrival allowance, seconds
 
     def __post_init__(self):
-        if self.kind not in ("tumbling", "sliding", "count"):
+        if self.kind not in ("tumbling", "sliding", "count", "time"):
             raise ValueError(f"unknown window kind {self.kind!r}")
         if self.size is not None and self.size < 1:
             raise ValueError("window size must be >= 1")
         if self.step < 1:
             raise ValueError("window step must be >= 1")
+        if self.kind == "time":
+            if self.span_s <= 0:
+                raise ValueError("timed window span_s must be > 0")
+            if self.grace_s < 0:
+                raise ValueError("timed window grace_s must be >= 0")
 
     @classmethod
     def tumbling(cls, size: int) -> "WindowPolicy":
@@ -97,8 +117,15 @@ class WindowPolicy:
     def count(cls, every: int = 1) -> "WindowPolicy":
         return cls("count", None, every)
 
+    @classmethod
+    def timed(cls, span_s: float, grace_s: float = 0.0) -> "WindowPolicy":
+        return cls("time", None, 1, span_s, grace_s)
+
     def fires(self, n_arrivals: int) -> bool:
-        """Does the ``n_arrivals``-th arrival complete a window?"""
+        """Does the ``n_arrivals``-th arrival complete a window?
+        (Count-based policies only; timed windows fire on watermark.)"""
+        if self.kind == "time":
+            return False
         if self.size is None:
             return n_arrivals % self.step == 0
         return (n_arrivals >= self.size
@@ -137,9 +164,18 @@ class SphereStream:
         self.record_size = record_size
         self.backend = backend
         self._cache_chunks = cache_chunks
+        # contention-aware engines hand the planner the physical-path
+        # mapping so cross-site transfers queue per link; blind engines
+        # (and engines predating the knob) plan with private links
+        link_of = (engine._link_of
+                   if getattr(engine, "contention_aware", False)
+                   and hasattr(engine, "_link_of") else None)
         self.planner = SpherePlanner(speeds=engine.speeds,
                                      speculate_factor=engine.speculate_factor,
-                                     move_time=engine._move_time)
+                                     move_time=engine._move_time,
+                                     link_of=link_of,
+                                     offload=getattr(engine, "offload",
+                                                     False))
         self._plan = IncrementalPlan()           # one group per window file
         self._file_tasks: Dict[str, List[TaskSpec]] = {}
         self._stragglers: Dict[str, Dict[str, int]] = {}
@@ -156,6 +192,15 @@ class SphereStream:
         self.arrivals: List[str] = []
         self._arrived: set = set()
         self._n_arrivals = 0
+        # timed-window state (kind == "time"): files buffered per
+        # event-time bucket until the watermark passes the bucket's end;
+        # buckets fire strictly in order starting at _next_bucket, and a
+        # unique file landing in an already-fired bucket bumps
+        # late_dropped instead of joining a window.
+        self._timed_pending: Dict[int, List[str]] = {}
+        self._max_event_time = float("-inf")
+        self._next_bucket = 0
+        self.late_dropped = 0
         self.window_files: Tuple[str, ...] = tuple(files)
         self.windows_formed = 0
         self.jobs_run = 0
@@ -225,6 +270,9 @@ class SphereStream:
         name = event.path
         if self.closed or name in self._arrived:
             return
+        if self.window_policy.kind == "time":
+            self._on_timed_arrival(name, event)
+            return
         self._arrived.add(name)
         self.arrivals.append(name)
         self._n_arrivals += 1
@@ -234,6 +282,54 @@ class SphereStream:
             self._arrived = set(self.arrivals)
         if self.window_policy.fires(self._n_arrivals):
             self._advance(self.window_policy.window(self.arrivals))
+
+    # ------------------------------------------------------ timed windows
+    def _on_timed_arrival(self, name: str, event) -> None:
+        """Event-time windowing: bucket the arrival by the file's real
+        landing time (``event_time`` in the event detail — the master's
+        published ``time`` is its monotonic clock, which would clamp a
+        late landing forward and hide its lateness), then flush every
+        bucket the watermark has passed."""
+        pol = self.window_policy
+        self._arrived.add(name)  # late files dedup + count exactly once
+        t = float(event.detail.get("event_time", event.time))
+        bucket = int(t // pol.span_s)
+        if bucket < self._next_bucket:
+            self.late_dropped += 1
+            return
+        self._n_arrivals += 1
+        self._timed_pending.setdefault(bucket, []).append(name)
+        if t > self._max_event_time:
+            self._max_event_time = t
+        self._flush_watermark()
+
+    @property
+    def watermark(self) -> float:
+        """Current event-time watermark: the latest landing time seen,
+        minus the grace allowance (``-inf`` before any timed arrival)."""
+        return self._max_event_time - self.window_policy.grace_s
+
+    def advance_watermark(self, now: float) -> None:
+        """Declare that simulated time has reached ``now`` even though
+        no file said so (the stream's clock only advances on arrivals):
+        fires every pending timed bucket whose end the new watermark
+        passes.  Callers use this to flush the final window(s) of a
+        bounded run, or to time out a quiet period."""
+        if self.window_policy.kind != "time":
+            raise ValueError("advance_watermark applies to timed "
+                             "windows only")
+        if now > self._max_event_time:
+            self._max_event_time = float(now)
+        self._flush_watermark()
+
+    def _flush_watermark(self) -> None:
+        pol = self.window_policy
+        watermark = self._max_event_time - pol.grace_s
+        while (self._next_bucket + 1) * pol.span_s <= watermark:
+            files = self._timed_pending.pop(self._next_bucket, None)
+            self._next_bucket += 1
+            if files:  # empty event-time spans form no window
+                self._advance(tuple(files))
 
     def _advance(self, new_window: Tuple[str, ...]) -> None:
         for f in self.window_files:
@@ -387,6 +483,7 @@ class SphereStream:
             rep.bytes_moved += plan.bytes_moved
             rep.speculated += plan.speculated
             rep.speculation_wins += plan.speculation_wins
+            rep.link_wait_seconds += plan.link_wait
             t_stage = plan.seconds
 
             out = executor.run_stage(job, stage, plan, parts, rep,

@@ -56,12 +56,18 @@ class SectorClient:
         return res.seconds
 
     def upload(self, name: str, data: bytes,
-               replication: Optional[int] = None) -> None:
+               replication: Optional[int] = None,
+               at: Optional[float] = None) -> None:
+        """Write ``name`` through the chunk pipeline.  ``at`` is the
+        simulated landing time forwarded to ``file_complete`` — timed
+        stream windows bucket the file by it (omitted = the master's
+        current clock).  The client's own site anchors LLPR-weighted
+        placement when the master runs with that policy."""
         fm = self.master.create_file(name, len(data), self.user, replication)
         csz = self.master.chunk_size
         for i, cid in enumerate(fm.chunk_ids):
             blob = data[i * csz:(i + 1) * csz]
-            targets = self.master.placement(cid)
+            targets = self.master.placement(cid, src_site=self.site)
             if not targets:
                 raise RuntimeError("no live chunk servers")
             # pipeline: client -> first replica -> next replica (chain)
@@ -73,7 +79,7 @@ class SectorClient:
                 self.master.commit_chunk(cid, sid, len(blob), digest)
                 prev_site = srv.site
         # every chunk committed: wake file-created subscribers (streams)
-        self.master.file_complete(name)
+        self.master.file_complete(name, now=at)
 
     def download(self, name: str) -> bytes:
         metas = self.master.lookup(name, self.user, self.site)

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import bisect
 import hashlib
+import math
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.sector.acl import CommunityACL
@@ -95,11 +96,21 @@ class SectorMaster:
     def __init__(self, topology: Topology = TERAFLOW_TESTBED,
                  default_replication: int = 3,
                  heartbeat_timeout: float = 30.0,
-                 chunk_size: int = CHUNK_SIZE):
+                 chunk_size: int = CHUNK_SIZE,
+                 llpr_placement: bool = False):
         self.topology = topology
         self.default_replication = default_replication
         self.heartbeat_timeout = heartbeat_timeout
         self.chunk_size = chunk_size
+        # llpr_placement: weight replica placement by each candidate
+        # site's EFFECTIVE bandwidth from the writing site (the LLPR
+        # model, Table 1) instead of pure hash order — replicas still
+        # spread across distinct sites, but well-connected sites win
+        # proportionally more of them.  Off by default: the paper's
+        # baseline placement is topology-blind consistent hashing, and
+        # the hash ring's minimal-movement guarantee is what most tests
+        # pin down.
+        self.llpr_placement = llpr_placement
         self.ring = HashRing()
         self.servers: Dict[str, ChunkServer] = {}
         self.files: Dict[str, FileMeta] = {}
@@ -179,10 +190,55 @@ class SectorMaster:
         self.files[name] = fm
         return fm
 
-    def placement(self, chunk_id: str) -> List[str]:
+    def place_llpr(self, key: str, n: int, src_site: str) -> List[str]:
+        """LLPR-weighted rendezvous placement: ``n`` servers for ``key``,
+        favouring sites with high effective bandwidth from ``src_site``.
+
+        Weighted rendezvous hashing: every live server draws a
+        deterministic pseudo-uniform ``u`` from ``hash(key, server)``
+        and scores ``-w / ln(u)`` with ``w`` the LLPR effective
+        bandwidth (:meth:`Topology.effective_bandwidth_bps`) from the
+        writing site to the server's site; highest scores win.  This
+        keeps consistent hashing's properties — per-key deterministic,
+        minimal reshuffling when membership changes — while making a
+        site's share of replicas proportional to its ``w`` (the
+        exponential-race property of the score).  Like
+        :meth:`HashRing.place`, distinct sites are preferred before
+        servers double up within a site."""
+        site_of = self._site_of()
+        scored: List[Tuple[float, str]] = []
+        for s in sorted(site_of):
+            u = (_h(f"{key}|{s}") + 1) / float(2 ** 64 + 1)  # in (0, 1)
+            w = self.topology.effective_bandwidth_bps(src_site, site_of[s])
+            scored.append((-w / math.log(u), s))
+        scored.sort(key=lambda t: (-t[0], t[1]))
+        chosen: List[str] = []
+        sites_used: Set[str] = set()
+        for _, s in scored:  # pass 1: distinct sites, by score
+            if site_of[s] in sites_used:
+                continue
+            chosen.append(s)
+            sites_used.add(site_of[s])
+            if len(chosen) == n:
+                return chosen
+        for _, s in scored:  # pass 2: any distinct server, by score
+            if s not in chosen:
+                chosen.append(s)
+                if len(chosen) == n:
+                    break
+        return chosen
+
+    def placement(self, chunk_id: str,
+                  src_site: Optional[str] = None) -> List[str]:
+        """Replica set for one chunk.  ``src_site`` (the writing
+        client's site) only matters under ``llpr_placement``, where it
+        anchors the effective-bandwidth weights; hash-ring placement
+        ignores it, so existing callers are unaffected."""
         ck = self.chunks[chunk_id]
-        return self.ring.place(chunk_id, self._repl(ck.file),
-                               self._site_of())
+        n = self._repl(ck.file)
+        if self.llpr_placement and src_site is not None:
+            return self.place_llpr(chunk_id, n, src_site)
+        return self.ring.place(chunk_id, n, self._site_of())
 
     def commit_chunk(self, chunk_id: str, server_id: str, size: int,
                      digest: str) -> None:
@@ -200,10 +256,18 @@ class SectorMaster:
         """Publish ``file-created``: every chunk of ``name`` is committed
         and readers may start.  The upload client calls this last, so the
         event always trails the file's ``chunk-replicated`` events —
-        a stream woken by it can plan and read immediately."""
+        a stream woken by it can plan and read immediately.
+
+        The event's ``time`` is the master's monotonic clock, which
+        clamps a late-reported landing forward; the RAW landing time
+        rides in ``detail["event_time"]`` so event-time consumers
+        (timed stream windows) can see lateness the clock hides."""
         fm = self.files[name]
-        self.events.publish(FILE_CREATED, time=self._tick(now), path=name,
-                            size=fm.size, chunks=fm.n_chunks)
+        t = self._tick(now)
+        self.events.publish(FILE_CREATED, time=t, path=name,
+                            size=fm.size, chunks=fm.n_chunks,
+                            event_time=(float(now) if now is not None
+                                        else t))
 
     # --------------------------------------------------------------- lookup
     def lookup(self, name: str, user: str = "public",
@@ -229,7 +293,15 @@ class SectorMaster:
 
     # ---------------------------------------------------------- re-replicate
     def repair_plan(self) -> List[Tuple[str, str, str]]:
-        """[(chunk_id, src_server, dst_server)] to restore replication."""
+        """[(chunk_id, src_server, dst_server)] to restore replication.
+
+        Destinations come from the active placement policy: hash-ring
+        order normally, LLPR-weighted rendezvous (anchored at the
+        surviving replica's site — that is where the repair bytes flow
+        from) under ``llpr_placement``.  The :class:`ReplicationDaemon`
+        executes this plan verbatim, so flipping the knob redirects
+        re-replication toward well-connected sites with no daemon
+        changes."""
         plan = []
         site_of = self._site_of()
         for cid in sorted(self.under_replicated):
@@ -239,9 +311,13 @@ class SectorMaster:
             if not live:
                 continue  # data loss: nothing to copy from (tested)
             need = self._repl(ck.file) - len(live)
-            candidates = [s for s in self.ring.place(cid, self._repl(ck.file)
-                                                     + need, site_of)
-                          if s not in ck.locations]
+            if self.llpr_placement:
+                ranked = self.place_llpr(cid, self._repl(ck.file) + need,
+                                         self.servers[live[0]].site)
+            else:
+                ranked = self.ring.place(cid, self._repl(ck.file) + need,
+                                         site_of)
+            candidates = [s for s in ranked if s not in ck.locations]
             for dst in candidates[:need]:
                 plan.append((cid, live[0], dst))
         return plan

@@ -12,6 +12,14 @@ published — replicas are restored during the event delivery, not up to
 periodic :meth:`tick` scan remains as the backstop for damage that emits
 no event (silent corruption found by :meth:`verify_all`, repairs that
 could not complete earlier for lack of live targets).
+
+Where repaired replicas LAND is the master's policy, not the daemon's:
+``run_repair`` executes ``master.repair_plan()`` verbatim, so a master
+constructed with ``llpr_placement=True`` steers re-replication toward
+sites with high effective bandwidth from the surviving copy
+(LLPR-weighted rendezvous — see
+:meth:`repro.sector.master.SectorMaster.place_llpr`) with no changes
+here.
 """
 from __future__ import annotations
 

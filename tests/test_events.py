@@ -169,7 +169,8 @@ def test_upload_publishes_commits_then_file_created(tmp_path):
     assert kinds.count(CHUNK_REPLICATED) == 3 * 2       # 3 chunks x 2 replicas
     created = got[-1]
     assert created.path == "d/f"
-    assert created.detail == {"size": 2500, "chunks": 3}
+    assert created.detail == {"size": 2500, "chunks": 3,
+                              "event_time": 0.0}
     # replica counts ramp 1..replication per chunk
     per_chunk = {}
     for e in got[:-1]:

@@ -148,3 +148,125 @@ def test_shuffle_charges_actual_origins():
     assert local == 500
     assert moved == 600
     assert seconds == pytest.approx(4.0)  # slowest flow (400 bytes)
+
+
+# ------------------------------------------------------------- contention
+
+def _site_link_of(site_of):
+    """Worker->site mapping to the unordered site-pair link key (what
+    the engine's _link_of derives from the topology)."""
+    def link_of(src, dst):
+        a, b = site_of[src], site_of[dst]
+        if a == b:
+            return None
+        return (a, b) if a <= b else (b, a)
+    return link_of
+
+
+def _plan(link_seconds, seconds=5.0, moved=100):
+    from repro.core.planner import StagePlan
+    return StagePlan((), seconds, 0, moved, 0, 0, tuple(link_seconds), 0.0)
+
+
+def test_merged_serializes_groups_on_shared_bottleneck_link():
+    """Transfer-group ready-time merging: two groups each needing 4s of
+    the SAME link merge to the summed link time (~2x one group), not the
+    old max-of-makespans."""
+    inc = IncrementalPlan()
+    inc.add("a", _plan([(("east", "west"), 4.0)]))
+    inc.add("b", _plan([(("east", "west"), 4.0)]))
+    m = inc.merged()
+    assert m.seconds == pytest.approx(8.0)          # 4 + 4 on one wave
+    assert dict(m.link_seconds) == {("east", "west"): 8.0}
+
+
+def test_merged_disjoint_links_keep_max_of_makespans():
+    """Groups whose transfers ride DISTINCT links still run in parallel:
+    merged makespan is unchanged from the blind merge."""
+    inc = IncrementalPlan()
+    inc.add("a", _plan([(("east", "west"), 4.0)]))
+    inc.add("b", _plan([(("east", "north"), 4.0)]))
+    m = inc.merged()
+    assert m.seconds == pytest.approx(5.0)          # max group makespan
+    assert len(m.link_seconds) == 2
+
+
+def test_blind_groups_merge_exactly_as_before():
+    """A contention-blind planner's groups carry no link occupancy, so
+    merged() reduces to the pre-contention max-of-makespans bit-for-bit."""
+    inc = IncrementalPlan()
+    inc.add("a", _plan([], seconds=3.0))
+    inc.add("b", _plan([], seconds=7.0))
+    m = inc.merged()
+    assert m.seconds == pytest.approx(7.0)
+    assert m.link_seconds == () and m.link_wait == 0.0
+
+
+def test_plan_stage_queues_offloaded_fetches_per_link():
+    """Two offloaded fetches sharing one wave serialize: the second
+    transfer waits for the first (link_wait) and the link's busy time
+    accumulates both."""
+    site_of = {"a0": "east", "b0": "west", "b1": "west"}
+    p = SpherePlanner(move_time=lambda nb, s, d: 10.0,
+                      link_of=_site_link_of(site_of), offload=True,
+                      speculate_factor=1e9)
+    tasks = _tasks([int(PROCESS_RATE * 100)] * 3, [("a0",)] * 3)
+    plan = p.plan_stage(tasks, ["a0", "b0", "b1"])
+    by_worker = {t.executor for t in plan.tasks}
+    assert by_worker == {"a0", "b0", "b1"}          # one task offloaded each
+    assert dict(plan.link_seconds) == {("east", "west"): pytest.approx(20.0)}
+    assert plan.link_wait == pytest.approx(10.0)    # 2nd transfer queued
+    # makespan: local 100s; b0 move 10 + proc 100; b1 waits 10 then same
+    assert plan.seconds == pytest.approx(120.0)
+
+
+def test_plan_shuffle_sums_flows_sharing_a_link():
+    """Flows on one wave serialize (sum); flows on distinct waves stay
+    parallel (max); the blind planner keeps pure max-of-flows."""
+    site_of = {"a": "east", "b": "west", "c": "west", "d": "north"}
+    flows = [("a", "b", 200), ("a", "c", 400), ("a", "d", 100),
+             ("a", "a", 500)]
+    blind = SpherePlanner(move_time=lambda nb, s, d: nb / 100.0)
+    aware = SpherePlanner(move_time=lambda nb, s, d: nb / 100.0,
+                          link_of=_site_link_of(site_of))
+    b_sec, b_moved, b_local = blind.plan_shuffle(flows)
+    a_sec, a_moved, a_local = aware.plan_shuffle(flows)
+    assert (b_moved, b_local) == (a_moved, a_local) == (700, 500)
+    assert b_sec == pytest.approx(4.0)   # slowest flow, private links
+    assert a_sec == pytest.approx(6.0)   # east-west carries 200+400
+
+
+def test_price_plan_charges_blind_assignment_its_true_cost():
+    """price_plan keeps the assignment but replays it through the link
+    schedule: a blind plan that over-subscribed one wave gets its real,
+    queued makespan; an aware plan prices at its own estimate."""
+    site_of = {"a0": "east", "b0": "west", "b1": "west"}
+    link_of = _site_link_of(site_of)
+    kw = dict(move_time=lambda nb, s, d: 10.0, offload=True,
+              speculate_factor=1e9)
+    blind = SpherePlanner(link_of=None, **kw)
+    aware = SpherePlanner(link_of=link_of, **kw)
+    tasks = _tasks([int(PROCESS_RATE * 15)] * 4, [("a0",)] * 4)
+    p_blind = blind.plan_stage(tasks, ["a0", "b0", "b1"])
+    p_aware = aware.plan_stage(tasks, ["a0", "b0", "b1"])
+    c_blind = aware.price_plan(p_blind, ["a0", "b0", "b1"])
+    c_aware = aware.price_plan(p_aware, ["a0", "b0", "b1"])
+    # the assignment is preserved, only the pricing changes
+    assert [(t.key, t.executor) for t in sorted(c_blind.tasks,
+                                                key=lambda t: t.key)] == \
+           [(t.key, t.executor) for t in sorted(p_blind.tasks,
+                                                key=lambda t: t.key)]
+    assert c_blind.seconds > p_blind.seconds        # optimism corrected
+    assert c_aware.seconds == pytest.approx(p_aware.seconds)
+    assert c_blind.seconds >= c_aware.seconds       # aware plans the queue
+
+
+def test_contention_knobs_off_is_bit_identical():
+    """link_of=None + offload=False must reproduce the legacy planner
+    exactly, including on plans with moves."""
+    tasks = _tasks([300, 100, 200, 100], [("a",), ("b",), (), ("a", "b")])
+    legacy = SpherePlanner(move_time=lambda nb, s, d: nb / 1e6)
+    knobs = SpherePlanner(move_time=lambda nb, s, d: nb / 1e6,
+                          link_of=None, offload=False)
+    assert legacy.plan_stage(tasks, ["a", "b"]) == \
+        knobs.plan_stage(tasks, ["a", "b"])

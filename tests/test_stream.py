@@ -408,3 +408,124 @@ def test_streaming_kmeans_backends_agree(tmp_path, backend):
     assert skm.windows_fit == 3
     cents = skm.centroids[np.argsort(skm.centroids[:, 0])]
     assert np.abs(cents - true_c).max() < 0.5
+
+
+# ----------------------------- timed windows ---------------------------------
+
+def test_timed_policy_validates():
+    with pytest.raises(ValueError, match="span_s"):
+        WindowPolicy.timed(0.0)
+    with pytest.raises(ValueError, match="grace_s"):
+        WindowPolicy.timed(10.0, grace_s=-1.0)
+    assert WindowPolicy.timed(10.0).fires(99) is False  # watermark-driven
+
+
+def test_timed_windows_bucket_by_event_time(tmp_path):
+    """Files land in event-time buckets; a bucket fires when the
+    watermark passes its end, and empty spans form no window."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    eng = SphereEngine(master, client)
+    stream = eng.stream("s/", window=WindowPolicy.timed(10.0),
+                        record_size=REC)
+    seen = []
+    stream.on_window(lambda s, idx, files: seen.append((idx, files)))
+
+    _upload_at(client, "s/a", at=5.0)        # bucket 0
+    assert seen == []                        # watermark 5 < bucket end 10
+    _upload_at(client, "s/b", at=20.0)       # bucket 2; watermark 20
+    # bucket 0 fires with [a]; EMPTY bucket 1 is skipped, not a window
+    assert seen == [(0, ("s/a",))]
+    _upload_at(client, "s/c", at=35.0)       # bucket 3; watermark 35
+    assert seen == [(0, ("s/a",)), (1, ("s/b",))]
+    assert stream.windows_formed == 2
+    stream.close()
+
+
+def test_timed_grace_saves_in_grace_straggler(tmp_path):
+    """The watermark trails the max event time by ``grace_s``, so a
+    straggler landing inside the grace period still joins its bucket."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    eng = SphereEngine(master, client)
+    stream = eng.stream("s/", window=WindowPolicy.timed(10.0, grace_s=5.0),
+                        record_size=REC)
+    seen = []
+    stream.on_window(lambda s, idx, files: seen.append(files))
+
+    _upload_at(client, "s/a", at=12.0)       # bucket 1; watermark 7
+    _upload_at(client, "s/late", at=9.0)     # bucket 0 — saved by grace
+    assert seen == [] and stream.late_dropped == 0
+    _upload_at(client, "s/b", at=16.0)       # watermark 11: bucket 0 fires
+    assert seen == [("s/late",)]
+    stream.close()
+
+
+def test_timed_late_file_dropped_and_counted(tmp_path):
+    """A file whose bucket already fired is dropped loudly: counted in
+    ``late_dropped``, never a member of any window."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    eng = SphereEngine(master, client)
+    stream = eng.stream("s/", window=WindowPolicy.timed(10.0),
+                        record_size=REC)
+    seen = []
+    stream.on_window(lambda s, idx, files: seen.append(files))
+
+    _upload_at(client, "s/a", at=5.0)
+    _upload_at(client, "s/b", at=25.0)       # fires bucket 0
+    assert seen == [("s/a",)]
+    _upload_at(client, "s/tardy", at=3.0)    # bucket 0 already gone
+    assert stream.late_dropped == 1
+    stream.advance_watermark(100.0)          # flush everything pending
+    assert all("s/tardy" not in files for files in seen)
+    stream.close()
+
+
+def test_advance_watermark_flushes_and_validates(tmp_path):
+    """``advance_watermark`` drives the watermark without a new arrival
+    (end-of-stream flush); count-based streams reject it."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    eng = SphereEngine(master, client)
+    stream = eng.stream("s/", window=WindowPolicy.timed(10.0, grace_s=5.0),
+                        record_size=REC)
+    seen = []
+    stream.on_window(lambda s, idx, files: seen.append(files))
+    _upload_at(client, "s/a", at=2.0)
+    _upload_at(client, "s/b", at=4.0)
+    assert seen == []
+    stream.advance_watermark(50.0)
+    assert seen == [("s/a", "s/b")]
+    # moving time backwards is a no-op, not a rewind
+    stream.advance_watermark(1.0)
+    assert stream.watermark == pytest.approx(45.0)
+    stream.close()
+
+    counted = eng.stream("s/", window=WindowPolicy.sliding(2),
+                         record_size=REC)
+    with pytest.raises(ValueError, match="timed"):
+        counted.advance_watermark(10.0)
+    counted.close()
+
+
+def test_timed_window_runs_jobs(tmp_path):
+    """A timed window is a full SphereStream window: jobs run against
+    exactly the files the watermark admitted."""
+    master, servers, client = make_cloud(tmp_path, chunk_size=1000)
+    eng = SphereEngine(master, client)
+    stream = eng.stream("s/", window=WindowPolicy.timed(10.0),
+                        record_size=REC, backend="bytes")
+    data = {}
+    data["s/a"] = _upload_at(client, "s/a", at=1.0)
+    data["s/b"] = _upload_at(client, "s/b", at=8.0)
+    stream.advance_watermark(30.0)
+    assert stream.window_files == ("s/a", "s/b")
+    out, rep = stream.run(_identity_job("bytes"))
+    assert b"".join(out) and sum(len(b) for b in out) == \
+        sum(len(d) for d in data.values())
+    stream.close()
+
+
+def _upload_at(client, name, at, n=20, seed=None):
+    rng = np.random.default_rng(abs(hash(name)) % 2**32 if seed is None
+                                else seed)
+    data = rng.bytes(n * REC)
+    client.upload(name, data, replication=2, at=at)
+    return data

@@ -1,0 +1,106 @@
+"""Wide-area control plane: link identity/fallback regressions and
+LLPR-weighted replica placement (paper §5 / Table 1 provenance).
+
+Separate from ``test_sector.py`` so these run without the optional
+``hypothesis`` dependency."""
+import pytest
+
+from repro.sector import ChunkServer, SectorClient, SectorMaster
+from repro.sector.topology import TERAFLOW_TESTBED, Topology
+
+
+def _degraded_topology():
+    """Three sites where the routes from ``home`` differ sharply: a
+    clean metro wave to ``near`` and a lossy transcontinental path to
+    ``far`` whose UDT effective bandwidth is ~8x lower — the OCT routes
+    are all end-host-capped to within 10%, so proportionality needs a
+    topology with a genuinely degraded route."""
+    t = Topology(sites=["home", "near", "far"])
+    t.add("home", "near", 10e9, 0.002, 1e-7)
+    t.add("home", "far", 10e9, 0.200, 5e-3)
+    t.add("near", "far", 10e9, 0.200, 5e-3)
+    return t
+
+
+def test_llpr_placement_shares_track_effective_bandwidth(tmp_path):
+    """Rendezvous shares are proportional to LLPR effective bandwidth:
+    the degraded route's site gets a several-fold smaller share of
+    single-replica placements, while two equally-reachable sites split
+    evenly."""
+    topo = _degraded_topology()
+    master = SectorMaster(topology=topo, llpr_placement=True)
+    for site in topo.sites:
+        master.register(ChunkServer(f"{site}0", site, tmp_path))
+
+    w = {s: topo.effective_bandwidth_bps("home", s) for s in topo.sites}
+    assert w["near"] / w["far"] > 4          # the route really is degraded
+
+    counts = {s: 0 for s in topo.sites}
+    n_keys = 2000
+    for i in range(n_keys):
+        (srv,) = master.place_llpr(f"k{i}", 1, "home")
+        counts[srv[:-1]] += 1
+    share = {s: counts[s] / n_keys for s in topo.sites}
+    expect = {s: w[s] / sum(w.values()) for s in topo.sites}
+    for s in topo.sites:  # exponential-race property, +-25% relative
+        assert share[s] == pytest.approx(expect[s], rel=0.25), (s, share)
+    assert share["far"] < share["near"] / 3
+
+
+def test_llpr_placement_is_deterministic_and_spreads_sites(tmp_path):
+    """Same key -> same replica set; multi-replica placement prefers
+    distinct sites before doubling up (the HashRing.place contract,
+    kept under LLPR weighting)."""
+    topo = _degraded_topology()
+    master = SectorMaster(topology=topo, llpr_placement=True)
+    for site in topo.sites:
+        for k in range(2):
+            master.register(ChunkServer(f"{site}{k}", site, tmp_path))
+    a = master.place_llpr("some-chunk", 3, "home")
+    assert a == master.place_llpr("some-chunk", 3, "home")
+    assert len({s[:-1] for s in a}) == 3     # one server per site first
+    b = master.place_llpr("some-chunk", 5, "home")
+    assert b[:3] == a                        # growing n extends the set
+
+
+def test_repair_uses_llpr_destinations(tmp_path):
+    """Re-replication after a failure routes through the same LLPR
+    placement: with the far route degraded, repairs of home-written
+    data land on near-site servers while any are available."""
+    topo = _degraded_topology()
+    master = SectorMaster(topology=topo, chunk_size=1024,
+                          llpr_placement=True, heartbeat_timeout=5.0)
+    for site in ("home", "near"):
+        for k in range(2):
+            master.register(ChunkServer(f"{site}{k}", site, tmp_path))
+    master.register(ChunkServer("far0", "far", tmp_path))
+    master.acl.add_member("u")
+    master.acl.grant_write("u")
+    client = SectorClient(master, "u", "home")
+    client.upload("f", bytes(4 * 1024), replication=2)
+
+    victim = next(iter(master.chunks.values())).locations.copy().pop()
+    master.deregister(victim)     # graceful loss: marks under-replicated
+    plan = master.repair_plan()
+    assert plan, "under-replicated chunks must produce repair work"
+    for _, src, dst in plan:
+        assert master.servers[dst].alive and dst != victim
+        # the degraded site is the last resort, never preferred while a
+        # home/near server can take the replica
+        assert master.servers[dst].site != "far"
+
+
+def test_distance_and_link_agree_on_unknown_pairs():
+    """Regression: ``distance`` delegates to ``link``, so an unknown
+    site pair gets the default-WAN RTT symmetrically — the two queries
+    can never disagree about which path a pair is on (a divergent
+    hand-rolled fallback once made nearest-replica reads and transfer
+    pricing rank routes differently)."""
+    t = TERAFLOW_TESTBED
+    assert t.distance("chicago", "atlantis") == t.default_wan.rtt_s
+    assert t.distance("atlantis", "chicago") == t.default_wan.rtt_s
+    assert t.distance("atlantis", "atlantis") == t.local.rtt_s
+    for (a, b) in t.links:
+        assert t.distance(a, b) == t.distance(b, a) == t.link(a, b).rtt_s
+        assert t.link_key(a, b) == t.link_key(b, a) is not None
+    assert t.link_key("x", "x") is None
