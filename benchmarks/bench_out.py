@@ -1,0 +1,59 @@
+"""Shared writer for the ``BENCH_*.json`` benchmark artifacts.
+
+Every benchmark (the :mod:`benchmarks.run` aggregator and each table
+script run standalone) writes its machine-readable result through
+:func:`write_bench`, so the JSON shape is defined once and every
+artifact carries the same provenance stamp: the git SHA it was measured
+at and the JAX backend it ran on.  ``check_regression.py`` reads the
+``result`` subtree; provenance rides alongside it, so a regression
+report can always say *which commit* produced the baseline it is
+comparing against.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import time
+from typing import Optional
+
+
+def git_sha() -> Optional[str]:
+    """HEAD commit of the repo this file lives in (None outside git)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10)
+    except (OSError, subprocess.SubprocessError):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
+def provenance() -> dict:
+    """The stamp every benchmark artifact carries."""
+    try:
+        import jax
+        backend = jax.default_backend()
+    except Exception:  # noqa: BLE001 — provenance must never fail a bench
+        backend = None
+    return {
+        "git_sha": git_sha(),
+        "jax_backend": backend,
+        "written_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+
+
+def write_bench(section: str, result, *, smoke: bool, ok: bool = True,
+                out_dir: str = ".") -> str:
+    """Write ``BENCH_<section>.json`` under ``out_dir`` and return the
+    path.  ``result`` is the section's structured output (an error
+    summary when ``ok`` is False) — consumers address into it as
+    ``result.<key>...``, so the envelope never nests it deeper."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{section}.json")
+    with open(path, "w") as f:
+        json.dump({"section": section, "smoke": smoke, "ok": ok,
+                   "provenance": provenance(), "result": result},
+                  f, indent=2, default=str)
+    return path

@@ -121,7 +121,7 @@ def load_all(tag: str = "") -> List[dict]:
     return out
 
 
-def main(smoke: bool = False) -> list:
+def main(smoke: bool = False, out_dir: str = ".") -> list:
     rows = load_all()  # parses whatever dry-run artifacts exist — cheap
     print("cell,compute_s,memory_s,collective_s,dominant,useful_ratio,"
           "roofline_fraction,temp_gb,fits_hbm")
@@ -134,4 +134,11 @@ def main(smoke: bool = False) -> list:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    try:
+        from benchmarks.bench_out import write_bench
+    except ImportError:
+        from bench_out import write_bench
+    smoke = "--smoke" in sys.argv
+    write_bench("roofline", main(smoke=smoke), smoke=smoke)

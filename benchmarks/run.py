@@ -11,11 +11,12 @@ the process exit non-zero.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
 import traceback
+
+from benchmarks.bench_out import write_bench
 
 
 def _section(name: str, fn, *, smoke: bool, out_dir: str) -> bool:
@@ -23,16 +24,13 @@ def _section(name: str, fn, *, smoke: bool, out_dir: str) -> bool:
     t0 = time.time()
     ok = True
     try:
-        result = fn(smoke=smoke)
+        result = fn(smoke=smoke, out_dir=out_dir)
     except Exception as e:  # keep the harness running, fail at exit
         print(f"ERROR,{type(e).__name__}: {e}")
         traceback.print_exc()
         result = {"error": f"{type(e).__name__}: {e}"}
         ok = False
-    path = os.path.join(out_dir, f"BENCH_{name}.json")
-    with open(path, "w") as f:
-        json.dump({"section": name, "smoke": smoke, "ok": ok,
-                   "result": result}, f, indent=2, default=str)
+    path = write_bench(name, result, smoke=smoke, ok=ok, out_dir=out_dir)
     print(f"-- {name} done in {time.time() - t0:.1f}s -> {path}")
     return ok
 

@@ -111,7 +111,7 @@ def run(files: int, win: int, n_per_file: int, iters: int) -> dict:
     }
 
 
-def main(smoke: bool = False) -> dict:
+def main(smoke: bool = False, out_dir: str = ".") -> dict:
     result = run(**(SMOKE if smoke else FULL))
     print("window_seconds:", result["window_seconds"])
     print("rebuild_seconds:", result["rebuild_seconds"])
@@ -122,4 +122,9 @@ def main(smoke: bool = False) -> dict:
 
 
 if __name__ == "__main__":
-    main(smoke="--smoke" in sys.argv)
+    try:
+        from benchmarks.bench_out import write_bench
+    except ImportError:
+        from bench_out import write_bench
+    smoke = "--smoke" in sys.argv
+    write_bench("stream_window", main(smoke=smoke), smoke=smoke)

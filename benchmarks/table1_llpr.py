@@ -40,7 +40,7 @@ def run() -> list:
     return rows
 
 
-def main(smoke: bool = False) -> list:
+def main(smoke: bool = False, out_dir: str = ".") -> list:
     rows = run()  # analytic — already tiny, same scale in smoke mode
     print("route,udt_mbps,llpr_udt,paper_mbps,paper_llpr,tcp_mbps,llpr_tcp")
     for r in rows:
@@ -51,4 +51,11 @@ def main(smoke: bool = False) -> list:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    try:
+        from benchmarks.bench_out import write_bench
+    except ImportError:
+        from bench_out import write_bench
+    smoke = "--smoke" in sys.argv
+    write_bench("table1_llpr", main(smoke=smoke), smoke=smoke)

@@ -124,7 +124,7 @@ def run(sizes=SIZES) -> dict:
     }
 
 
-def main(smoke: bool = False) -> dict:
+def main(smoke: bool = False, out_dir: str = ".") -> dict:
     result = run(SMOKE_SIZES if smoke else SIZES)
     cols = ["records", "sector_files", "bytes_sim_seconds",
             "bytes_real_seconds", "array_rebuild_seconds",
@@ -139,4 +139,9 @@ def main(smoke: bool = False) -> dict:
 
 
 if __name__ == "__main__":
-    main(smoke="--smoke" in sys.argv)
+    try:
+        from benchmarks.bench_out import write_bench
+    except ImportError:
+        from bench_out import write_bench
+    smoke = "--smoke" in sys.argv
+    write_bench("table2_kmeans", main(smoke=smoke), smoke=smoke)

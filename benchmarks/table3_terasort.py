@@ -39,7 +39,7 @@ import time
 
 import numpy as np
 
-from repro.core import SphereEngine, SphereJob, TaskSpec
+from repro.core import SphereEngine, SphereJob, TaskSpec, Tracer
 from repro.core.records import RecordBatch, scatter_by_ids
 from repro.core.shuffle import (partition_batch, range_partitioner,
                                 sample_boundaries, terasort_stages)
@@ -316,6 +316,65 @@ def run_partition_bench(n_records: int = 1_000_000, n_buckets: int = 16,
     }
 
 
+def run_tracing(n_records: int = 50_000, *, best_of: int = 7,
+                out_dir: str | None = None) -> dict:
+    """The tracing plane's two promises, measured: enabled-mode overhead
+    on the array TeraSort stays small (``overhead_ratio``, CI-gated at
+    <5% over the untraced baseline via ``check_regression.py``), and the
+    traced run exports a Chrome/Perfetto timeline
+    (``TRACE_terasort.json`` when ``out_dir`` is given — the artifact
+    ``scripts/check_trace.py`` validates in CI).
+
+    Both arms use the engine-level timing policy (``timing_sync=True``,
+    one warm run, best-of-N minimum on the whole-job wall time) so the
+    ratio compares steady-state runs, not compile noise — and the timed
+    runs interleave the two arms so clock drift or background load
+    lands on both equally instead of skewing the ratio."""
+    data = _gen_records(n_records)
+    bounds = _sample_bounds(data)
+
+    def setup(tracer):
+        master, client = _make_cloud()
+        client.upload("tera", data, replication=3)
+        eng = SphereEngine(master, client, timing_sync=True, tracer=tracer)
+        job = _terasort_job(bounds, "array")
+        eng.run(job)   # warm: trace UDFs + shuffle kernels once
+        return eng, job
+
+    eng_off, job_off = setup(None)
+    tracer = Tracer()
+    eng_on, job_on = setup(tracer)
+    gc.collect()
+    best_off = best_on = None
+    rep_off = rep_on = None
+    for _ in range(max(best_of, 1)):
+        t0 = time.perf_counter()
+        _, rep_off = eng_off.run(job_off)
+        dt = time.perf_counter() - t0
+        best_off = dt if best_off is None else min(best_off, dt)
+        t0 = time.perf_counter()
+        _, rep_on = eng_on.run(job_on)
+        dt = time.perf_counter() - t0
+        best_on = dt if best_on is None else min(best_on, dt)
+    out = {
+        "records": n_records,
+        "untraced_job_seconds": round(best_off, 4),
+        "traced_job_seconds": round(best_on, 4),
+        "overhead_ratio": round(best_on / max(best_off, 1e-9), 3),
+        # tracing must ride the existing harvest: same sync count on/off
+        "untraced_host_syncs": rep_off.host_syncs,
+        "traced_host_syncs": rep_on.host_syncs,
+        "spans": tracer.count(),
+    }
+    if out_dir is not None:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, "TRACE_terasort.json")
+        doc = tracer.export_chrome(path)
+        out["trace_path"] = path
+        out["trace_events"] = len(doc["traceEvents"])
+    return out
+
+
 _DEVICE_BENCH = """
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.spmd import distributed_sort, barrier_sort
@@ -349,7 +408,7 @@ def run_device_level(n_keys: int = 1 << 18) -> dict:
             "correct": True}
 
 
-def main(smoke: bool = False) -> dict:
+def main(smoke: bool = False, out_dir: str = ".") -> dict:
     host = run_host_level(5_000 if smoke else 50_000)
     print("level,metric,value")
     for label in ("sphere", "hadoop_style", "sphere_array"):
@@ -370,9 +429,17 @@ def main(smoke: bool = False) -> dict:
     dev = run_device_level(1 << 14 if smoke else 1 << 18)
     for k, v in dev.items():
         print(f"device,{k},{v}")
+    trc = run_tracing(20_000 if smoke else 50_000, out_dir=out_dir)
+    for k, v in trc.items():
+        print(f"tracing,{k},{v}")
     return {"host": host, "host_scales": scales, "partition": part,
-            "device": dev}
+            "device": dev, "tracing": trc}
 
 
 if __name__ == "__main__":
-    main(smoke="--smoke" in sys.argv)
+    try:
+        from benchmarks.bench_out import write_bench
+    except ImportError:
+        from bench_out import write_bench
+    smoke = "--smoke" in sys.argv
+    write_bench("table3_terasort", main(smoke=smoke), smoke=smoke)

@@ -224,7 +224,7 @@ def run(chunks: int, chunk_kb: int) -> dict:
     }
 
 
-def main(smoke: bool = False) -> dict:
+def main(smoke: bool = False, out_dir: str = ".") -> dict:
     result = run(**(SMOKE if smoke else FULL))
     print("bottlenecked:", result["bottlenecked"])
     print("uncontended:", result["uncontended"])
@@ -245,4 +245,9 @@ def main(smoke: bool = False) -> dict:
 
 
 if __name__ == "__main__":
-    main(smoke="--smoke" in sys.argv)
+    try:
+        from benchmarks.bench_out import write_bench
+    except ImportError:
+        from bench_out import write_bench
+    smoke = "--smoke" in sys.argv
+    write_bench("wan", main(smoke=smoke), smoke=smoke)

@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""Validate a Chrome trace-event JSON export (``Tracer.export_chrome``).
+
+    python scripts/check_trace.py TRACE.json [--expect NAME_PREFIX]...
+
+Checks the structural invariants Perfetto/chrome://tracing rely on and
+the ones our exporter promises:
+
+* the document parses, has ``traceEvents``, and ``otherData.open_spans``
+  is 0 (every span was closed before export);
+* every event is a known phase (``X`` complete, ``i`` instant, ``M``
+  metadata) with numeric ``ts`` (µs) and, for ``X``, numeric ``dur >= 0``;
+* instants carry the ``s`` scope field;
+* span ids (``args.id``) are unique and every ``args.parent`` resolves
+  to a recorded span id;
+* within each track (``(pid, tid)``), timestamps are monotonically
+  non-decreasing in document order — the sort the exporter guarantees;
+* every ``(pid, tid)`` with events has a ``thread_name`` metadata record
+  and every ``pid`` a ``process_name``;
+* each ``--expect PREFIX`` (repeatable) must match at least one event
+  name or track name — the CI smoke gate asserts the TeraSort export
+  actually contains worker tracks, host-sync markers and bus events.
+
+Exit code 0 when every check passes; 1 with a line per violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PHASES = {"X", "i", "M"}
+
+
+def check(doc: dict, expect: list) -> list:
+    errors = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents missing or not a list"]
+    open_spans = doc.get("otherData", {}).get("open_spans")
+    if open_spans != 0:
+        errors.append(f"otherData.open_spans = {open_spans!r}, expected 0")
+
+    ids = set()
+    parents = []         # (event-name, parent-id) to resolve after the scan
+    last_ts = {}         # (pid, tid) -> last seen ts
+    named_threads = set()
+    named_procs = set()
+    track_names = set()
+    used_tracks = set()
+    used_pids = set()
+
+    for i, ev in enumerate(events):
+        where = f"event[{i}] {ev.get('name')!r}"
+        ph = ev.get("ph")
+        if ph not in PHASES:
+            errors.append(f"{where}: unknown phase {ph!r}")
+            continue
+        if ph == "M":
+            if ev.get("name") == "thread_name":
+                named_threads.add((ev.get("pid"), ev.get("tid")))
+                track_names.add(ev.get("args", {}).get("name"))
+            elif ev.get("name") == "process_name":
+                named_procs.add(ev.get("pid"))
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            errors.append(f"{where}: non-numeric ts {ts!r}")
+            continue
+        key = (ev.get("pid"), ev.get("tid"))
+        used_tracks.add(key)
+        used_pids.add(ev.get("pid"))
+        if ts < last_ts.get(key, float("-inf")):
+            errors.append(f"{where}: ts {ts} < previous {last_ts[key]} "
+                          f"on track {key} (non-monotonic)")
+        last_ts[key] = ts
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"{where}: bad dur {dur!r}")
+        else:  # instant
+            if ev.get("s") not in ("t", "p", "g"):
+                errors.append(f"{where}: instant missing scope 's'")
+        sid = ev.get("args", {}).get("id")
+        if sid is not None:
+            if sid in ids:
+                errors.append(f"{where}: duplicate span id {sid}")
+            ids.add(sid)
+        parent = ev.get("args", {}).get("parent")
+        if parent is not None:
+            parents.append((where, parent))
+
+    for where, parent in parents:
+        if parent not in ids:
+            errors.append(f"{where}: parent {parent} does not resolve "
+                          f"to a recorded span id")
+    for key in used_tracks:
+        if key not in named_threads:
+            errors.append(f"track {key}: events but no thread_name metadata")
+    for pid in used_pids:
+        if pid not in named_procs:
+            errors.append(f"pid {pid}: events but no process_name metadata")
+
+    names = {ev.get("name", "") for ev in events} | \
+        {n for n in track_names if n}
+    for prefix in expect:
+        if not any(n.startswith(prefix) for n in names):
+            errors.append(f"--expect {prefix!r}: no event or track name "
+                          f"starts with it")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--expect", action="append", default=[],
+                    help="require an event/track name with this prefix "
+                         "(repeatable)")
+    args = ap.parse_args(argv)
+    with open(args.trace) as f:
+        doc = json.load(f)
+    errors = check(doc, args.expect)
+    for e in errors:
+        print(f"FAIL {e}")
+    n = len(doc.get("traceEvents", []))
+    if errors:
+        print(f"\n{args.trace}: {len(errors)} violation(s) in {n} events")
+        return 1
+    print(f"{args.trace}: ok ({n} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

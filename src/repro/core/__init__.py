@@ -4,6 +4,8 @@ from repro.core.executor import ArrayExecutor, BytesExecutor  # noqa: F401
 from repro.core.job import SphereJob, SphereStage  # noqa: F401
 from repro.core.planner import (IncrementalPlan,  # noqa: F401
                                 SpherePlanner, StagePlan, TaskPlan, TaskSpec)
+from repro.core.metrics import MetricsRegistry  # noqa: F401
 from repro.core.stream import SphereStream, WindowPolicy  # noqa: F401
 from repro.core.shuffle import (hash_partitioner,  # noqa: F401
                                 range_partitioner, reduce_partitioner)
+from repro.core.trace import NULL_TRACER, NullTracer, Tracer  # noqa: F401

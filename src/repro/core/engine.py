@@ -54,14 +54,16 @@ import warnings
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.job import SphereJob
+from repro.core.metrics import MetricsRegistry
 from repro.core.planner import (PROCESS_RATE, SphereReport, TaskSpec)
 from repro.core.stream import SphereStream, WindowPolicy
+from repro.core.trace import NULL_TRACER, Tracer
 from repro.sector.client import SectorClient
 from repro.sector.master import SectorMaster
 from repro.sector.transport import simulate_transfer
 
 __all__ = ["SphereEngine", "SphereSession", "SphereStream", "SphereReport",
-           "WindowPolicy", "PROCESS_RATE"]
+           "WindowPolicy", "PROCESS_RATE", "Tracer", "MetricsRegistry"]
 
 
 class SphereEngine:
@@ -71,9 +73,20 @@ class SphereEngine:
                  pad_block: int = 4096, prefetch: bool = True,
                  prefetch_depth: int = 1, timing_sync: bool = False,
                  fused_rounds: bool = True, mesh=None,
-                 contention_aware: bool = True, offload: bool = False):
+                 contention_aware: bool = True, offload: bool = False,
+                 tracer=None, metrics: Optional[MetricsRegistry] = None):
         self.master = master
         self.client = client
+        # observability plane: a recording Tracer threads spans through
+        # every planner/executor/stream this engine builds and turns the
+        # master's bus events into timeline instants; the default
+        # NULL_TRACER records nothing and costs nothing.  The metrics
+        # registry mirrors every report the engine's runs write.
+        self.tracer = tracer or NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        if self.tracer.enabled:
+            self.master.tracer = self.tracer
+            self.tracer.attach_bus(master.events)
         self.speeds = speeds or {}
         self.speculate_factor = speculate_factor
         self.max_retries = max_retries

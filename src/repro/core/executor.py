@@ -27,7 +27,6 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -42,6 +41,7 @@ from repro.core.records import RecordBatch, StackedBatch
 from repro.core.shuffle import (FusedRoundResult, _quarter_rows,
                                 scatter_pieces_dispatch,
                                 scatter_round_dispatch)
+from repro.core.trace import NULL_TRACER
 from repro.sector.server import ServerDown
 
 # per-bucket origin accounting: origins[i][worker] = bytes of bucket i
@@ -52,12 +52,15 @@ Origins = List[Dict[str, int]]
 class _ExecutorBase:
     def __init__(self, client, workers: Sequence[str], max_retries: int = 3,
                  cache_chunks: bool = False, prefetch: bool = True,
-                 prefetch_depth: int = 1):
+                 prefetch_depth: int = 1, tracer=None):
         self.client = client
         self.workers = list(workers)
         self.max_retries = max_retries
         self.prefetch = prefetch
         self.prefetch_depth = max(1, prefetch_depth)
+        # wall-clock span tracer (NULL_TRACER = record nothing, but
+        # spans still time themselves — the one timing idiom)
+        self.tracer = tracer or NULL_TRACER
         # session mode: stage-0 chunks, once fetched and decoded, stay
         # resident (bytes: record lists; array: device RecordBatches) so
         # a chain of jobs over the same file pays the host round-trip
@@ -94,10 +97,13 @@ class _ExecutorBase:
         gone."""
         if self._chunk_cache is not None and key in self._chunk_cache:
             return self._chunk_cache[key]
-        blob = self._fetch_chunk(key, rep)
-        if blob is None:
-            return None
-        decoded = self._decode_chunk(job, blob)
+        with self.tracer.span("fetch-chunk", track="fetch",
+                              attrs={"key": key}) as sp:
+            blob = self._fetch_chunk(key, rep)
+            if blob is None:
+                sp.set_attrs(lost=True)
+                return None
+            decoded = self._decode_chunk(job, blob)
         if self._chunk_cache is not None:
             self._chunk_cache[key] = decoded
         return decoded
@@ -133,8 +139,11 @@ class _ExecutorBase:
                     q.put(("cache", None))
                     continue
                 try:
-                    q.put(("ok", self._decode_chunk(
-                        job, self.client.read_chunk(t.key))))
+                    with self.tracer.span("fetch-chunk", track="prefetch",
+                                          attrs={"key": t.key}):
+                        payload = self._decode_chunk(
+                            job, self.client.read_chunk(t.key))
+                    q.put(("ok", payload))
                 except (IOError, ServerDown):
                     q.put(("retry", None))
                 except BaseException as err:  # noqa: BLE001 — re-raised
@@ -201,14 +210,16 @@ class BytesExecutor(_ExecutorBase):
         buckets: List[List[bytes]] = [[] for _ in range(n)]
         origins: Origins = [{} for _ in range(n)]
         rep.shuffle_rounds += 1
-        t0 = time.perf_counter()
-        for w in self.workers:
-            for r in out[w]:
-                b = stage.partitioner(r, n)
-                buckets[b].append(r)
-                origins[b][w] = origins[b].get(w, 0) + len(r)
-                rep.partitioned_records += 1
-        rep.partition_seconds += time.perf_counter() - t0
+        with self.tracer.span("shuffle-round", track="shuffle",
+                              attrs={"backend": "bytes",
+                                     "buckets": n}) as sp:
+            for w in self.workers:
+                for r in out[w]:
+                    b = stage.partitioner(r, n)
+                    buckets[b].append(r)
+                    origins[b][w] = origins[b].get(w, 0) + len(r)
+                    rep.partitioned_records += 1
+        rep.partition_seconds += sp.wall_seconds
         return buckets, origins
 
     def place_buckets(self, buckets, parts) -> None:
@@ -421,10 +432,10 @@ class ArrayExecutor(_ExecutorBase):
                  pad_block: int = 4096, cache_chunks: bool = False,
                  prefetch: bool = True, timing_sync: bool = False,
                  fused_rounds: bool = True, mesh=None,
-                 prefetch_depth: int = 1):
+                 prefetch_depth: int = 1, tracer=None):
         super().__init__(client, workers, max_retries,
                          cache_chunks=cache_chunks, prefetch=prefetch,
-                         prefetch_depth=prefetch_depth)
+                         prefetch_depth=prefetch_depth, tracer=tracer)
         self.pad_block = pad_block
         self.fused_rounds = fused_rounds
         # the mesh only carries rounds whose slot/worker counts divide
@@ -468,10 +479,7 @@ class ArrayExecutor(_ExecutorBase):
 
     def _note_traces(self, stage: SphereStage, traced: _TracedUDF,
                      rep: SphereReport) -> None:
-        # max-aggregate per report label: a retracing stage must not be
-        # masked by a later same-named stage that traced once
-        rep.udf_traces[stage.name] = max(rep.udf_traces.get(stage.name, 0),
-                                         traced.traces)
+        rep.note_udf_traces(stage.name, traced.traces)
 
     def _apply_masked(self, stage: SphereStage, batch: RecordBatch,
                       target: int, rep: SphereReport) -> RecordBatch:
@@ -481,7 +489,10 @@ class ArrayExecutor(_ExecutorBase):
         returned whole — reduction outputs have no padding rows to
         slice off."""
         traced = self._traced_for(stage, stage.masked_udf, masked=True)
-        out = traced(batch.block(target), batch.num_records, stage.params)
+        with self.tracer.span("dispatch:udf", track="dispatch",
+                              attrs={"stage": stage.name, "rows": target}):
+            out = traced(batch.block(target), batch.num_records,
+                         stage.params)
         rep.device_dispatches += 1
         self._note_traces(stage, traced, rep)
         return RecordBatch(out)
@@ -495,7 +506,9 @@ class ArrayExecutor(_ExecutorBase):
         there."""
         traced = self._traced_for(stage, stage.batch_udf)
         n = batch.num_records
-        out = traced(batch.block(target), n)
+        with self.tracer.span("dispatch:udf", track="dispatch",
+                              attrs={"stage": stage.name, "rows": target}):
+            out = traced(batch.block(target), n)
         rep.device_dispatches += 1
         self._note_traces(stage, traced, rep)
         if out.shape[0] != target:
@@ -571,7 +584,10 @@ class ArrayExecutor(_ExecutorBase):
                 # legacy/compat path: bytes-udf decode, per-shape tracing
                 # (shape-polymorphic UDFs see exact batches, never junk
                 # padding rows)
-                out[dst].append(stage.apply_batch(batch.compact()))
+                with self.tracer.span("dispatch:udf", track="dispatch",
+                                      attrs={"stage": stage.name,
+                                             "rows": batch.num_records}):
+                    out[dst].append(stage.apply_batch(batch.compact()))
                 rep.device_dispatches += 1
         return out
 
@@ -633,9 +649,13 @@ class ArrayExecutor(_ExecutorBase):
             if stacked is not None \
                     and stacked.n_slots == self._mesh_slots(stacked.n_slots):
                 # steady state: the resident stack IS the stage input
-                out = traced.stacked(
-                    stacked.data, jnp.asarray(stacked.n_valid, jnp.int32),
-                    target)
+                with self.tracer.span("dispatch:udf-fused", track="dispatch",
+                                      attrs={"stage": stage.name,
+                                             "slots": stacked.n_slots,
+                                             "rows": target}):
+                    out = traced.stacked(
+                        stacked.data,
+                        jnp.asarray(stacked.n_valid, jnp.int32), target)
                 rep.device_dispatches += 1
                 self._note_traces(stage, traced, rep)
                 self._check_stacked(stage, out, stacked.n_slots, target)
@@ -671,8 +691,12 @@ class ArrayExecutor(_ExecutorBase):
                                       np.zeros(pad_slots, np.int32)])
             slot_workers = np.concatenate(
                 [slot_workers, np.zeros(pad_slots, np.int64)])
-        out = traced.stack_pieces(pieces, jnp.asarray(n_valid, jnp.int32),
-                                  target)
+        with self.tracer.span("dispatch:udf-fused", track="dispatch",
+                              attrs={"stage": stage.name,
+                                     "slots": len(pieces), "rows": target}):
+            out = traced.stack_pieces(pieces,
+                                      jnp.asarray(n_valid, jnp.int32),
+                                      target)
         rep.device_dispatches += 1
         self._note_traces(stage, traced, rep)
         self._check_stacked(stage, out, len(pieces), target)
@@ -701,27 +725,33 @@ class ArrayExecutor(_ExecutorBase):
             return None
         key_spec, bounds = spec
         rep.shuffle_rounds += 1
-        t0 = time.perf_counter()
-        parts_dev, counts_dev, hist_dev = fused_scatter_round(
-            stacked.data, jnp.asarray(stacked.n_valid, jnp.int32),
-            bounds, key_spec=key_spec, n_buckets=n, n_workers=W,
-            mesh=self.mesh)
-        rep.device_dispatches += 1
-        counts, hist_sb = jax.device_get((counts_dev, hist_dev))
-        rep.host_syncs += 1
-        origin_counts = np.zeros((n, W), np.int64)
-        for s in range(S):
-            origin_counts[:, int(out.slot_workers[s])] += hist_sb[s]
-        origins: Origins = [
-            {self.workers[w]: int(origin_counts[b, w]) * stacked.record_size
-             for w in np.nonzero(origin_counts[b])[0]}
-            for b in range(n)]
-        result = FusedRoundResult(parts_dev, counts.astype(np.int64),
-                                  origins, 1)
-        rep.partitioned_records += stacked.num_records
-        if self.timing_sync:
-            jax.block_until_ready(result.data)
-        rep.partition_seconds += time.perf_counter() - t0
+        with self.tracer.span("shuffle-round", track="shuffle",
+                              attrs={"backend": "array", "path": "mesh",
+                                     "buckets": n}) as sp:
+            parts_dev, counts_dev, hist_dev = fused_scatter_round(
+                stacked.data, jnp.asarray(stacked.n_valid, jnp.int32),
+                bounds, key_spec=key_spec, n_buckets=n, n_workers=W,
+                mesh=self.mesh)
+            rep.device_dispatches += 1
+            counts, hist_sb = jax.device_get((counts_dev, hist_dev))
+            rep.host_syncs += 1
+            if self.tracer.enabled:
+                self.tracer.instant("host-sync", track="host-sync",
+                                    attrs={"where": "mesh-harvest"})
+            origin_counts = np.zeros((n, W), np.int64)
+            for s in range(S):
+                origin_counts[:, int(out.slot_workers[s])] += hist_sb[s]
+            origins: Origins = [
+                {self.workers[w]:
+                 int(origin_counts[b, w]) * stacked.record_size
+                 for w in np.nonzero(origin_counts[b])[0]}
+                for b in range(n)]
+            result = FusedRoundResult(parts_dev, counts.astype(np.int64),
+                                      origins, 1)
+            rep.partitioned_records += stacked.num_records
+            if self.timing_sync:
+                jax.block_until_ready(result.data)
+        rep.partition_seconds += sp.wall_seconds
         return result, origins
 
     def _bucketize_fused(self, stage: SphereStage, out: _StackedOut, n: int,
@@ -734,7 +764,6 @@ class ArrayExecutor(_ExecutorBase):
             mesh_res = self._bucketize_mesh(stage, out, n, rep)
             if mesh_res is not None:
                 return mesh_res
-        t0 = time.perf_counter()
         rd = scatter_round_dispatch(out.stacked, stage.partitioner, n,
                                     worker_names=self.workers,
                                     slot_workers=out.slot_workers,
@@ -742,18 +771,24 @@ class ArrayExecutor(_ExecutorBase):
         if rd is None:
             return None
         rep.shuffle_rounds += 1
-        rep.device_dispatches += rd.dispatches
-        synced = jax.device_get(rd.sync_arrays)     # the round's ONE sync
-        rep.host_syncs += 1
-        result = rd.harvest(synced)
-        rep.device_dispatches += result.dispatches
-        rep.partitioned_records += out.stacked.num_records
-        if self.timing_sync:
-            if result.data is not None:
-                jax.block_until_ready(result.data)
-            elif result.groups:
-                jax.block_until_ready([g for _, g in result.groups])
-        rep.partition_seconds += time.perf_counter() - t0
+        with self.tracer.span("shuffle-round", track="shuffle",
+                              attrs={"backend": "array", "path": "fused",
+                                     "buckets": n}) as sp:
+            rep.device_dispatches += rd.dispatches
+            synced = jax.device_get(rd.sync_arrays)  # the round's ONE sync
+            rep.host_syncs += 1
+            if self.tracer.enabled:
+                self.tracer.instant("host-sync", track="host-sync",
+                                    attrs={"where": "fused-harvest"})
+            result = rd.harvest(synced)
+            rep.device_dispatches += result.dispatches
+            rep.partitioned_records += out.stacked.num_records
+            if self.timing_sync:
+                if result.data is not None:
+                    jax.block_until_ready(result.data)
+                elif result.groups:
+                    jax.block_until_ready([g for _, g in result.groups])
+        rep.partition_seconds += sp.wall_seconds
         return result, result.origins
 
     def bucketize(self, stage: SphereStage, out, n: int, rep: SphereReport
@@ -811,34 +846,47 @@ class ArrayExecutor(_ExecutorBase):
         buckets: List[List[RecordBatch]] = [[] for _ in range(n)]
         origins: Origins = [{} for _ in range(n)]
         rep.shuffle_rounds += 1
-        t0 = time.perf_counter()
-        round_: List[Tuple[str, int, object]] = []
-        for w in self.workers:                      # phase 1: dispatch all
-            pieces = out[w]
-            if not pieces:
-                continue
-            disp = scatter_pieces_dispatch(pieces, stage.partitioner, n,
-                                           pad_block=self.pad_block)
-            rep.host_syncs += disp.host_syncs
-            rep.device_dispatches += 1              # the worker's scatter
-            round_.append((w, sum(p.num_records for p in pieces), disp))
-        pending = [d for (_, _, d) in round_ if d.pending]
-        if pending:                                 # phase 2: one barrier
-            synced = jax.device_get([d.sync_arrays for d in pending])
-            rep.host_syncs += 1
-            for d, s in zip(pending, synced):
-                d.harvest(synced=s)
-                rep.device_dispatches += d.n        # per-bucket slices
-        for w, nrec, disp in round_:
-            for i, piece in enumerate(disp.harvest()):
-                if piece.num_records:
-                    buckets[i].append(piece)
-                    origins[i][w] = piece.nbytes
-            rep.partitioned_records += nrec
-        if self.timing_sync:
-            jax.block_until_ready([p.data for bucket in buckets
-                                   for p in bucket])
-        rep.partition_seconds += time.perf_counter() - t0
+        with self.tracer.span("shuffle-round", track="shuffle",
+                              attrs={"backend": "array",
+                                     "path": "per-worker",
+                                     "buckets": n}) as sp:
+            round_: List[Tuple[str, int, object]] = []
+            for w in self.workers:                  # phase 1: dispatch all
+                pieces = out[w]
+                if not pieces:
+                    continue
+                disp = scatter_pieces_dispatch(pieces, stage.partitioner, n,
+                                               pad_block=self.pad_block)
+                rep.host_syncs += disp.host_syncs
+                if disp.host_syncs and self.tracer.enabled:
+                    self.tracer.instant(
+                        "host-sync", track="host-sync",
+                        attrs={"where": "dispatch-fallback", "worker": w,
+                               "count": disp.host_syncs})
+                rep.device_dispatches += 1          # the worker's scatter
+                round_.append((w, sum(p.num_records for p in pieces), disp))
+            pending = [d for (_, _, d) in round_ if d.pending]
+            if pending:                             # phase 2: one barrier
+                synced = jax.device_get([d.sync_arrays for d in pending])
+                rep.host_syncs += 1
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "host-sync", track="host-sync",
+                        attrs={"where": "round-barrier",
+                               "dispatches": len(pending)})
+                for d, s in zip(pending, synced):
+                    d.harvest(synced=s)
+                    rep.device_dispatches += d.n    # per-bucket slices
+            for w, nrec, disp in round_:
+                for i, piece in enumerate(disp.harvest()):
+                    if piece.num_records:
+                        buckets[i].append(piece)
+                        origins[i][w] = piece.nbytes
+                rep.partitioned_records += nrec
+            if self.timing_sync:
+                jax.block_until_ready([p.data for bucket in buckets
+                                       for p in bucket])
+        rep.partition_seconds += sp.wall_seconds
         return buckets, origins
 
     def place_buckets(self, buckets, parts) -> None:
@@ -908,13 +956,14 @@ def make_executor(backend: str, client, workers: Sequence[str], *,
                   max_retries: int = 3, pad_block: int = 4096,
                   cache_chunks: bool = False, prefetch: bool = True,
                   prefetch_depth: int = 1, timing_sync: bool = False,
-                  fused_rounds: bool = True, mesh=None):
+                  fused_rounds: bool = True, mesh=None, tracer=None):
     if backend == "array":
         return ArrayExecutor(client, workers, max_retries=max_retries,
                              pad_block=pad_block, cache_chunks=cache_chunks,
                              prefetch=prefetch, prefetch_depth=prefetch_depth,
                              timing_sync=timing_sync,
-                             fused_rounds=fused_rounds, mesh=mesh)
+                             fused_rounds=fused_rounds, mesh=mesh,
+                             tracer=tracer)
     return BytesExecutor(client, workers, max_retries=max_retries,
                          cache_chunks=cache_chunks, prefetch=prefetch,
-                         prefetch_depth=prefetch_depth)
+                         prefetch_depth=prefetch_depth, tracer=tracer)

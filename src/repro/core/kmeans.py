@@ -29,7 +29,6 @@ accelerates the assignment hot loop on TPU
 from __future__ import annotations
 
 import struct
-import time
 from typing import List, Optional, Tuple, Union
 
 import numpy as np
@@ -48,6 +47,7 @@ from repro.core.engine import SphereEngine, SphereReport, SphereSession
 from repro.core.job import SphereJob, SphereStage
 from repro.core.records import RecordBatch
 from repro.core.shuffle import reduce_partitioner
+from repro.core.trace import NULL_TRACER
 from repro.kernels.kmeans_assign import kmeans_assign_partials
 
 
@@ -217,25 +217,29 @@ def kmeans_sphere(engine: SphereEngine, file: str, dim: int, k: int,
                         backend=backend)
 
     try:
-        for _ in range(iters):
-            t0 = time.perf_counter()
-            if sess is None:
-                # re-plan + re-trace path: fresh stages, fresh job, fresh
-                # planner/executor on every iteration
-                stages = make_kmeans_stages(dim, k, backend)
-                job = SphereJob("kmeans", file, stages,
-                                record_size=record_size, backend=backend)
-            stages[0].params = (jnp.asarray(centroids) if backend == "array"
-                                else centroids.copy())
-            if sess is not None:
-                outputs, report = sess.run(job, report)
-            else:
-                outputs, report = engine.run(job, report)
-            sums, counts = _fold_outputs(outputs, dim, k, backend)
-            nz = counts > 0
-            centroids[nz] = (sums[nz] / counts[nz, None]).astype(np.float32)
+        tracer = getattr(engine, "tracer", None) or NULL_TRACER
+        for it in range(iters):
+            with tracer.span("kmeans-iter", track="control",
+                             attrs={"iter": it, "k": k}) as sp:
+                if sess is None:
+                    # re-plan + re-trace path: fresh stages, fresh job,
+                    # fresh planner/executor on every iteration
+                    stages = make_kmeans_stages(dim, k, backend)
+                    job = SphereJob("kmeans", file, stages,
+                                    record_size=record_size, backend=backend)
+                stages[0].params = (jnp.asarray(centroids)
+                                    if backend == "array"
+                                    else centroids.copy())
+                if sess is not None:
+                    outputs, report = sess.run(job, report)
+                else:
+                    outputs, report = engine.run(job, report)
+                sums, counts = _fold_outputs(outputs, dim, k, backend)
+                nz = counts > 0
+                centroids[nz] = (sums[nz]
+                                 / counts[nz, None]).astype(np.float32)
             if iter_seconds is not None:
-                iter_seconds.append(time.perf_counter() - t0)
+                iter_seconds.append(sp.wall_seconds)
     finally:
         if own_session:
             sess.close()

@@ -48,6 +48,7 @@ from dataclasses import dataclass, field
 from typing import (Callable, Dict, Hashable, List, Optional, Sequence,
                     Tuple)
 
+from repro.core.trace import NULL_TRACER
 from repro.sector.topology import LinkSchedule
 
 PROCESS_RATE = 400e6  # bytes/s of UDF processing on a speed-1.0 worker
@@ -56,6 +57,18 @@ PROCESS_RATE = 400e6  # bytes/s of UDF processing on a speed-1.0 worker
 MoveTime = Callable[[int, str, str], float]
 # physical path a worker-to-worker transfer rides (None = uncontended)
 LinkOf = Callable[[str, str], Optional[Hashable]]
+
+# SphereReport fields mirrored 1:1 into a bound MetricsRegistry as
+# ``sphere.<field>`` counters (the numeric accumulate-only fields);
+# locality_fraction mirrors as a gauge, stage_seconds as a histogram
+# (via observe_stage) and udf_traces as per-stage gauges (via
+# note_udf_traces).
+_MIRRORED_COUNTERS = frozenset({
+    "sim_seconds", "bytes_moved", "bytes_local", "tasks", "speculated",
+    "speculation_wins", "retried", "partition_seconds",
+    "partitioned_records", "planned_tasks", "reused_tasks",
+    "shuffle_rounds", "host_syncs", "device_dispatches",
+    "link_wait_seconds"})
 
 
 @dataclass
@@ -106,6 +119,67 @@ class SphereReport:
     # path).  The gap between a contention-blind estimate and reality.
     link_wait_seconds: float = 0.0
 
+    # ------------------------------------------------------ metrics mirror
+    def bind_metrics(self, registry, **labels) -> "SphereReport":
+        """Mirror this report into ``registry``: from now on every
+        counter-field mutation forwards its delta to the matching
+        ``sphere.<field>`` series, so registry reads and report fields
+        are two views of one write path (the report's current values
+        are seeded first — binding mid-run loses nothing).  Labels
+        identify this report's series; the engine adds a unique ``run``
+        label per binding so chained reports never collide."""
+        object.__setattr__(self, "_metrics", registry)
+        object.__setattr__(self, "_metric_labels", dict(labels))
+        for name in _MIRRORED_COUNTERS:
+            v = getattr(self, name)
+            if v:
+                registry.counter(f"sphere.{name}", **labels).inc(v)
+        registry.gauge("sphere.locality_fraction",
+                       **labels).set(self.locality_fraction)
+        for s in self.stage_seconds:
+            registry.histogram("sphere.stage_seconds", **labels).observe(s)
+        for stage, n in self.udf_traces.items():
+            registry.gauge("sphere.udf_traces", stage=stage,
+                           **labels).set(n)
+        return self
+
+    @property
+    def metric_labels(self) -> Dict[str, str]:
+        """Labels this report's mirrored series carry ({} if unbound)."""
+        return dict(getattr(self, "_metric_labels", {}))
+
+    def __setattr__(self, name: str, value) -> None:
+        m = self.__dict__.get("_metrics")
+        if m is not None:
+            if name in _MIRRORED_COUNTERS:
+                delta = value - self.__dict__.get(name, 0)
+                if delta:
+                    m.counter(f"sphere.{name}",
+                              **self._metric_labels).inc(delta)
+            elif name == "locality_fraction":
+                m.gauge("sphere.locality_fraction",
+                        **self._metric_labels).set(value)
+        object.__setattr__(self, name, value)
+
+    def observe_stage(self, seconds: float) -> None:
+        """Record one stage's simulated makespan (the ONE write path for
+        ``stage_seconds`` — list append + histogram observation)."""
+        self.stage_seconds.append(seconds)
+        m = self.__dict__.get("_metrics")
+        if m is not None:
+            m.histogram("sphere.stage_seconds",
+                        **self._metric_labels).observe(seconds)
+
+    def note_udf_traces(self, stage: str, traces: int) -> None:
+        """Record a stage UDF's distinct traced shapes (max-aggregated
+        per stage name: a retracing stage must not be masked by a later
+        same-named stage that traced once)."""
+        self.udf_traces[stage] = max(self.udf_traces.get(stage, 0), traces)
+        m = self.__dict__.get("_metrics")
+        if m is not None:
+            m.gauge("sphere.udf_traces", stage=stage,
+                    **self._metric_labels).set(self.udf_traces[stage])
+
 
 @dataclass(frozen=True)
 class TaskSpec:
@@ -140,6 +214,12 @@ class StagePlan:
     is the total time transfers sat queued behind other transfers.
     Contention-blind plans carry the defaults, so equality between two
     blind plans is unchanged from before the fields existed.
+
+    ``transfers`` records each cross-worker move's reservation on its
+    physical link — ``(link_key, task_key, begin, end)`` in simulated
+    seconds — exactly as :meth:`LinkSchedule.reserve` granted it.  The
+    tracer turns these into per-link timeline spans; moves riding a
+    ``None`` (uncontended) path are not recorded.
     """
     tasks: Tuple[TaskPlan, ...]
     seconds: float          # stage makespan (max task finish)
@@ -149,6 +229,7 @@ class StagePlan:
     speculation_wins: int
     link_seconds: Tuple[Tuple[Hashable, float], ...] = ()
     link_wait: float = 0.0
+    transfers: Tuple[Tuple[Hashable, str, float, float], ...] = ()
 
 
 def _sorted_link_items(busy: Dict[Hashable, float]
@@ -221,7 +302,11 @@ class IncrementalPlan:
             sum(g.speculated for g in groups),
             sum(g.speculation_wins for g in groups),
             _sorted_link_items(busy),
-            sum(g.link_wait for g in groups))
+            sum(g.link_wait for g in groups),
+            # per-group reservation times (each group planned from a
+            # clean link schedule, so spans from different groups may
+            # overlap on a shared track — see OBSERVABILITY.md)
+            tuple(tr for g in groups for tr in g.transfers))
 
 
 class SpherePlanner:
@@ -251,12 +336,13 @@ class SpherePlanner:
                  speculate_factor: float = 1.8,
                  move_time: Optional[MoveTime] = None,
                  link_of: Optional[LinkOf] = None,
-                 offload: bool = False):
+                 offload: bool = False, tracer=None):
         self.speeds = dict(speeds or {})
         self.speculate_factor = speculate_factor
         self._move_time = move_time or (lambda nbytes, src, dst: 0.0)
         self._link_of = link_of
         self.offload = offload
+        self.tracer = tracer or NULL_TRACER
         # per-JOB speculation state: worker -> count of tasks observed
         # straggling on it so far in the current job.  Later stages of the
         # same job avoid speculating *onto* these workers when another
@@ -312,9 +398,20 @@ class SpherePlanner:
         Contention-blind + locality-only (the default knobs) takes the
         legacy path; either knob routes through the link-aware scheduler.
         """
-        if self._link_of is None and not self.offload:
-            return self._plan_stage_blind(tasks, workers)
-        return self._plan_stage_aware(tasks, workers)
+        with self.tracer.span("planner:plan-stage", track="planner") as sp:
+            if self._link_of is None and not self.offload:
+                plan = self._plan_stage_blind(tasks, workers)
+            else:
+                plan = self._plan_stage_aware(tasks, workers)
+            if self.tracer.enabled:
+                sp.set_attrs(tasks=len(plan.tasks),
+                             sim_seconds=plan.seconds,
+                             bytes_local=plan.bytes_local,
+                             bytes_moved=plan.bytes_moved,
+                             speculated=plan.speculated,
+                             links_reserved=len(plan.transfers),
+                             link_wait=plan.link_wait)
+        return plan
 
     def _plan_stage_blind(self, tasks: Sequence[TaskSpec],
                           workers: Sequence[str]) -> StagePlan:
@@ -372,6 +469,7 @@ class SpherePlanner:
         link_busy: Dict[Hashable, float] = {}
         link_wait = 0.0
         bytes_local = bytes_moved = 0
+        transfers: List[Tuple[Hashable, str, float, float]] = []
         worker_list = list(workers)
 
         scheduled: List[Tuple[TaskSpec, str, float]] = []
@@ -408,6 +506,7 @@ class SpherePlanner:
                 link_wait += a_begin - act_ready[w]
                 if key is not None:
                     link_busy[key] = link_busy.get(key, 0.0) + move
+                    transfers.append((key, t.key, a_begin, a_end))
                 fin = a_end + self._proc_time(w, t.nbytes)
             act_ready[w] = fin
             scheduled.append((t, w, fin))
@@ -416,7 +515,7 @@ class SpherePlanner:
                                                            act_ready)
         return StagePlan(tuple(plans), seconds, bytes_local, bytes_moved,
                          speculated, wins, _sorted_link_items(link_busy),
-                         link_wait)
+                         link_wait, tuple(transfers))
 
     def _speculate(self, scheduled: List[Tuple[TaskSpec, str, float]],
                    act_ready: Dict[str, float]
@@ -470,6 +569,7 @@ class SpherePlanner:
         link_busy: Dict[Hashable, float] = {}
         link_wait = 0.0
         bytes_local = bytes_moved = 0
+        transfers: List[Tuple[Hashable, str, float, float]] = []
         repriced: List[TaskPlan] = []
         for p in sorted(plan.tasks, key=lambda p: -p.nbytes):
             w = p.executor
@@ -486,15 +586,24 @@ class SpherePlanner:
                 link_wait += begin - ready[w]
                 if key is not None:
                     link_busy[key] = link_busy.get(key, 0.0) + move
+                    transfers.append((key, p.key, begin, end))
                 bytes_moved += p.nbytes
                 fin = end + self._proc_time(w, p.nbytes)
             ready[w] = fin
             repriced.append(TaskPlan(p.key, p.nbytes, p.locs, p.worker, w,
                                      fin))
         seconds = max((p.finish for p in repriced), default=0.0)
-        return StagePlan(tuple(repriced), seconds, bytes_local, bytes_moved,
-                         plan.speculated, plan.speculation_wins,
-                         _sorted_link_items(link_busy), link_wait)
+        priced = StagePlan(tuple(repriced), seconds, bytes_local, bytes_moved,
+                           plan.speculated, plan.speculation_wins,
+                           _sorted_link_items(link_busy), link_wait,
+                           tuple(transfers))
+        if self.tracer.enabled:
+            self.tracer.instant("planner:price", track="planner",
+                                attrs={"tasks": len(priced.tasks),
+                                       "sim_seconds": priced.seconds,
+                                       "link_wait": priced.link_wait,
+                                       "links_reserved": len(transfers)})
+        return priced
 
     # ----------------------------------------------------------- shuffle
     def plan_shuffle(self, flows: Sequence[Tuple[str, str, int]]

@@ -46,6 +46,7 @@ from repro.core.executor import make_executor
 from repro.core.job import SphereJob
 from repro.core.planner import (IncrementalPlan, SpherePlanner, SphereReport,
                                 TaskSpec)
+from repro.core.trace import NULL_TRACER, link_track
 from repro.sector.events import weak_subscribe
 
 __all__ = ["SphereStream", "WindowPolicy"]
@@ -170,12 +171,14 @@ class SphereStream:
         link_of = (engine._link_of
                    if getattr(engine, "contention_aware", False)
                    and hasattr(engine, "_link_of") else None)
+        self.tracer = getattr(engine, "tracer", None) or NULL_TRACER
         self.planner = SpherePlanner(speeds=engine.speeds,
                                      speculate_factor=engine.speculate_factor,
                                      move_time=engine._move_time,
                                      link_of=link_of,
                                      offload=getattr(engine, "offload",
-                                                     False))
+                                                     False),
+                                     tracer=self.tracer)
         self._plan = IncrementalPlan()           # one group per window file
         self._file_tasks: Dict[str, List[TaskSpec]] = {}
         self._stragglers: Dict[str, Dict[str, int]] = {}
@@ -247,7 +250,8 @@ class SphereStream:
                                       timing_sync=self.engine.timing_sync,
                                       fused_rounds=getattr(
                                           self.engine, "fused_rounds", True),
-                                      mesh=getattr(self.engine, "mesh", None))
+                                      mesh=getattr(self.engine, "mesh", None),
+                                      tracer=self.tracer)
         self._needs_bind = False
 
     @property
@@ -339,6 +343,10 @@ class SphereStream:
         self._parts = None
         self.window_files = tuple(new_window)
         self.windows_formed += 1
+        if self.tracer.enabled:
+            self.tracer.instant("stream:window-advance", track="stream",
+                                attrs={"window": self.windows_formed - 1,
+                                       "files": len(new_window)})
         if self._window_cb is not None:
             self._window_cb(self, self.windows_formed - 1, self.window_files)
 
@@ -350,6 +358,10 @@ class SphereStream:
             self.executor.evict_chunks(t.key for t in tasks)
         self._plan.retire(name)
         self._stragglers.pop(name, None)
+        if self.tracer.enabled:
+            self.tracer.instant("stream:evict-file", track="stream",
+                                attrs={"file": name,
+                                       "chunks": len(tasks or ())})
 
     def _on_membership_event(self, event) -> None:
         if not self.closed:
@@ -393,6 +405,10 @@ class SphereStream:
                 self.workers)
             self._stragglers[f] = contrib
             rep.planned_tasks += len(plan.tasks)
+            if self.tracer.enabled:
+                self.tracer.instant("stream:plan-extend", track="stream",
+                                    attrs={"file": f,
+                                           "planned": len(plan.tasks)})
 
     # ----------------------------------------------------------- validate
     @property
@@ -442,10 +458,28 @@ class SphereStream:
         (per-bucket output blobs, report)."""
         self._validate(job, input)
         rep = report or SphereReport()
+        tracer = self.tracer
+        metrics = getattr(self.engine, "metrics", None)
+        if metrics is not None and rep.__dict__.get("_metrics") is None:
+            # mirror this report's counters into the engine's registry;
+            # the unique per-bind ``run`` label keeps two reports (e.g.
+            # a chained A/B pair) on distinct series
+            rep.bind_metrics(metrics, kind=self._kind,
+                             backend=self.backend,
+                             **metrics.next_run_labels())
         workers = self.workers
         planner, executor = self.planner, self.executor
         planner.reset_job_state()
+        with tracer.span(f"job:{job.name}", track="control",
+                         attrs={"kind": self._kind,
+                                "backend": self.backend,
+                                "input": input}):
+            return self._run_stages(job, rep, input, workers,
+                                    planner, executor, tracer)
 
+    def _run_stages(self, job: SphereJob, rep: SphereReport, input: str,
+                    workers, planner, executor, tracer
+                    ) -> Tuple[List[bytes], SphereReport]:
         if input == "chained":
             if self._parts is None:
                 raise RuntimeError("no previous job output to chain from")
@@ -465,19 +499,21 @@ class SphereStream:
             first = True
 
         for stage in job.stages:
-            if first:
-                plan = self._plan.merged()
-                # replay the straggler observations planning each window
-                # file's group made, so later stages of every job over
-                # this window see exactly the per-job state a fresh plan
-                # would produce
-                for contrib in self._stragglers.values():
-                    for w, c in contrib.items():
-                        planner.job_stragglers[w] = \
-                            planner.job_stragglers.get(w, 0) + c
-            else:
-                plan = planner.plan_stage(self.engine._schedule_view(tasks),
-                                          workers)
+            with tracer.span(f"plan:{stage.name}", track="control",
+                             attrs={"first": first}):
+                if first:
+                    plan = self._plan.merged()
+                    # replay the straggler observations planning each
+                    # window file's group made, so later stages of every
+                    # job over this window see exactly the per-job state
+                    # a fresh plan would produce
+                    for contrib in self._stragglers.values():
+                        for w, c in contrib.items():
+                            planner.job_stragglers[w] = \
+                                planner.job_stragglers.get(w, 0) + c
+                else:
+                    plan = planner.plan_stage(
+                        self.engine._schedule_view(tasks), workers)
             rep.tasks += len(plan.tasks)
             rep.bytes_local += plan.bytes_local
             rep.bytes_moved += plan.bytes_moved
@@ -485,28 +521,53 @@ class SphereStream:
             rep.speculation_wins += plan.speculation_wins
             rep.link_wait_seconds += plan.link_wait
             t_stage = plan.seconds
+            if tracer.enabled:
+                # simulated-clock timeline: one span per task on its
+                # executing worker's track, one per reserved transfer on
+                # its physical link's track, all offset to the job's
+                # running simulated clock
+                offset = rep.sim_seconds
+                for p in plan.tasks:
+                    end = offset + p.finish
+                    begin = max(offset, end - planner._proc_time(
+                        p.executor, p.nbytes))
+                    tracer.add_span(
+                        f"task:{p.key}", track=f"worker:{p.executor}",
+                        t0=begin, t1=end, clock="sim",
+                        attrs={"nbytes": p.nbytes, "planned": p.worker,
+                               "stage": stage.name})
+                for key, tkey, begin, end in plan.transfers:
+                    tracer.add_span(
+                        f"xfer:{tkey}", track=link_track(key),
+                        t0=offset + begin, t1=offset + end, clock="sim",
+                        attrs={"task": tkey, "stage": stage.name})
 
-            out = executor.run_stage(job, stage, plan, parts, rep,
-                                     first_stage=first)
+            with tracer.span(f"exec:{stage.name}", track="control",
+                             attrs={"tasks": len(plan.tasks)}):
+                out = executor.run_stage(job, stage, plan, parts, rep,
+                                         first_stage=first)
             if stage.partitioner is not None:
-                n = stage.n_buckets or len(workers)
-                buckets, origins = executor.bucketize(stage, out, n, rep)
-                # bucket i lives on worker i % len(workers); charge the
-                # movement of each fragment from its actual origin worker
-                flows = [(src, workers[i % len(workers)], nbytes)
-                         for i, origin in enumerate(origins)
-                         for src, nbytes in origin.items()]
-                t_shuffle, moved, local = planner.plan_shuffle(flows)
-                rep.bytes_moved += moved
-                rep.bytes_local += local
-                t_stage += t_shuffle
-                executor.place_buckets(buckets, parts)
+                with tracer.span(f"shuffle:{stage.name}", track="control"):
+                    n = stage.n_buckets or len(workers)
+                    buckets, origins = executor.bucketize(stage, out, n,
+                                                          rep)
+                    # bucket i lives on worker i % len(workers); charge
+                    # the movement of each fragment from its actual
+                    # origin worker
+                    flows = [(src, workers[i % len(workers)], nbytes)
+                             for i, origin in enumerate(origins)
+                             for src, nbytes in origin.items()]
+                    t_shuffle, moved, local = planner.plan_shuffle(flows)
+                    rep.bytes_moved += moved
+                    rep.bytes_local += local
+                    t_stage += t_shuffle
+                    executor.place_buckets(buckets, parts)
             else:
                 executor.set_parts(parts, out)
 
             sizes = executor.part_sizes(parts)
             t_stage += self.engine._stage_barrier_seconds(sum(sizes.values()))
-            rep.stage_seconds.append(t_stage)
+            rep.observe_stage(t_stage)
             rep.sim_seconds += t_stage
             first = False
             # next stage's tasks are the current partitions (local to owner)

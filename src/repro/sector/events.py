@@ -104,6 +104,30 @@ class EventBus:
         self._subs.append(sub)
         return sub
 
+    # ---------------------------------------------------------- introspection
+    def replay(self, *, since_seq: int = -1,
+               types: Optional[Iterable[str]] = None,
+               prefix: Optional[str] = None) -> List[SectorEvent]:
+        """Recent events from the bounded history ring, oldest first, in
+        seq order — the late-joiner API: a subscriber attaching after
+        the cloud was built (a tracer, a doctor) replays the recent
+        control-plane past before subscribing for the future.  Filters
+        match :meth:`subscribe`'s (``types`` validated the same way);
+        ``since_seq`` returns only events with ``seq > since_seq``, so a
+        consumer can resume from the last seq it saw.  Events older than
+        the ring's bound are gone — the ring is a window, not a log."""
+        tset: Optional[frozenset] = None
+        if types is not None:
+            tset = frozenset(types)
+            unknown = tset - set(EVENT_TYPES)
+            if unknown:
+                raise ValueError(f"unknown event types {sorted(unknown)}; "
+                                 f"choose from {EVENT_TYPES}")
+        return [ev for ev in self.history
+                if ev.seq > since_seq
+                and (tset is None or ev.type in tset)
+                and (prefix is None or ev.path.startswith(prefix))]
+
     def unsubscribe(self, sub: Subscription) -> None:
         sub.active = False
         try:

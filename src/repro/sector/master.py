@@ -122,6 +122,10 @@ class SectorMaster:
         # for membership invalidation and windowed file arrival
         self.events = EventBus()
         self.clock = 0.0  # last simulated time the master observed
+        # observability: an engine built with a recording tracer assigns
+        # it here (duck-typed — sector must not import core.trace, the
+        # dependency runs the other way); None = no tracing
+        self.tracer = None
 
     def _tick(self, now: Optional[float] = None) -> float:
         if now is not None:
@@ -237,8 +241,18 @@ class SectorMaster:
         ck = self.chunks[chunk_id]
         n = self._repl(ck.file)
         if self.llpr_placement and src_site is not None:
-            return self.place_llpr(chunk_id, n, src_site)
-        return self.ring.place(chunk_id, n, self._site_of())
+            replicas = self.place_llpr(chunk_id, n, src_site)
+        else:
+            replicas = self.ring.place(chunk_id, n, self._site_of())
+        if self.tracer is not None:
+            self.tracer.instant(
+                "master:placement", track="master", t=self.clock,
+                clock="sim",
+                attrs={"chunk": chunk_id,
+                       "policy": ("llpr" if self.llpr_placement
+                                  and src_site is not None else "ring"),
+                       "replicas": len(replicas)})
+        return replicas
 
     def commit_chunk(self, chunk_id: str, server_id: str, size: int,
                      digest: str) -> None:
@@ -320,6 +334,12 @@ class SectorMaster:
             candidates = [s for s in ranked if s not in ck.locations]
             for dst in candidates[:need]:
                 plan.append((cid, live[0], dst))
+        if self.tracer is not None:
+            self.tracer.instant(
+                "master:repair-plan", track="master", t=self.clock,
+                clock="sim",
+                attrs={"moves": len(plan),
+                       "under_replicated": len(self.under_replicated)})
         return plan
 
     def stats(self) -> dict:

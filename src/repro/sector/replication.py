@@ -48,7 +48,15 @@ class ReplicationDaemon:
                                        types=(SERVER_DIED,))
 
     def _on_server_died(self, event) -> None:
-        self.event_repairs += self.client.run_repair()
+        tracer = self.master.tracer
+        if tracer is None:
+            self.event_repairs += self.client.run_repair()
+            return
+        with tracer.span("replication-repair", track="master",
+                         attrs={"died": event.path}) as sp:
+            repaired = self.client.run_repair()
+            sp.set_attrs(repaired=repaired)
+        self.event_repairs += repaired
 
     def tick(self, now: float) -> dict:
         """Advance the daemon: detect failures, repair under-replication.

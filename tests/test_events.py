@@ -57,6 +57,32 @@ def test_seq_monotonic_and_history():
     assert [e.path for e in bus.history] == ["s2", "s3", "s4", "s5"]
 
 
+def test_replay_bounded_and_ordered():
+    bus = EventBus(history=4)
+    for i in range(6):
+        bus.publish(SERVER_JOINED, path=f"s{i}", time=float(i))
+    # replay returns the ring's window, oldest first, in seq order
+    assert [e.seq for e in bus.replay()] == [2, 3, 4, 5]
+    # events that aged out of the ring are gone
+    assert all(e.seq >= 2 for e in bus.replay(since_seq=-1))
+
+
+def test_replay_filters_match_subscribe():
+    bus = EventBus()
+    bus.publish(FILE_CREATED, path="angle/w0")
+    bus.publish(SERVER_JOINED, path="s1")
+    bus.publish(FILE_CREATED, path="other/w1")
+    bus.publish(FILE_CREATED, path="angle/w2")
+
+    assert [e.path for e in bus.replay(types=(FILE_CREATED,))] == \
+        ["angle/w0", "other/w1", "angle/w2"]
+    assert [e.path for e in bus.replay(prefix="angle/")] == \
+        ["angle/w0", "angle/w2"]
+    assert [e.seq for e in bus.replay(since_seq=1)] == [2, 3]
+    with pytest.raises(ValueError, match="unknown event types"):
+        bus.replay(types=("file-craeted",))
+
+
 def test_reentrant_publish_is_queued_breadth_first():
     """A publish from inside a callback must not interleave: the nested
     event is delivered to EVERY subscriber after the current event
